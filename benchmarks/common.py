@@ -1,0 +1,79 @@
+"""Shared harness for the paper-claim reproduction experiments.
+
+All experiments run the single-host faithful simulator (repro.core.simulator)
+on the synthetic mixture classification task (data/pipeline.py documents why
+MNIST/CIFAR are substituted). Experiments mirror the paper's figures; each
+module exposes run(quick: bool) -> dict and a textual summary.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.attacks import ByzantineSpec
+from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
+                                  coordinatewise_diameter_sum, l2_diameter)
+from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.optim.schedules import inverse_linear
+
+DEFAULT_MIX = MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2)
+
+
+def run_byzsgd(cfg: ByzSGDConfig, *, steps: int, batch: int, seed: int = 0,
+               lr0: float = 0.05, decay: float = 0.005,
+               mix: MixtureSpec = DEFAULT_MIX, metrics_every: int = 10,
+               track_delta: bool = False, hidden: int = 64):
+    """Train with ByzSGD; returns (logs, final accuracy, wall seconds)."""
+    init, loss, acc = make_mlp_problem(dim=mix.dim, hidden=hidden,
+                                       n_classes=mix.n_classes)
+    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(lr0, decay))
+    state = sim.init_state(jax.random.PRNGKey(seed))
+    stream, eval_set = classification_stream(seed, mix, cfg.n_workers, batch,
+                                             steps)
+    ex, ey = eval_set(2048)
+
+    def metrics(s):
+        p0 = jax.tree.map(lambda l: l[0], s.params)
+        m = {"acc": float(acc(p0, ex, ey))}
+        if track_delta:
+            m["delta"] = float(coordinatewise_diameter_sum(s.params,
+                                                           cfg.h_servers))
+            m["l2_diam"] = float(l2_diameter(s.params, cfg.h_servers))
+        return m
+
+    t0 = time.time()
+    state, logs = sim.run(state, stream, metrics_fn=metrics,
+                          metrics_every=metrics_every)
+    wall = time.time() - t0
+    final = metrics(state)
+    return logs, final, wall
+
+
+def run_vanilla_sgd(*, steps: int, batch: int, n_workers: int = 9,
+                    seed: int = 0, lr0: float = 0.05, decay: float = 0.005,
+                    mix: MixtureSpec = DEFAULT_MIX, hidden: int = 64):
+    """Paper baseline: single trusted server, plain averaging."""
+    init, loss, acc = make_mlp_problem(dim=mix.dim, hidden=hidden,
+                                       n_classes=mix.n_classes)
+    lr = inverse_linear(lr0, decay)
+    params = init(jax.random.PRNGKey(seed))
+    grad = jax.jit(jax.grad(loss))
+    stream, eval_set = classification_stream(seed, mix, n_workers, batch, steps)
+    ex, ey = eval_set(2048)
+    logs = []
+    t0 = time.time()
+    for t, (x, y) in enumerate(stream):
+        g = jax.tree.map(
+            lambda *gs: jnp.mean(jnp.stack(gs), 0),
+            *[grad(params, (x[i], y[i])) for i in range(n_workers)])
+        params = jax.tree.map(lambda p, gg: p - lr(t) * gg, params, g)
+        if t % 10 == 0:
+            logs.append({"step": t, "acc": float(acc(params, ex, ey))})
+    return logs, {"acc": float(acc(params, ex, ey))}, time.time() - t0
+
+
+def fmt_curve(logs, key="acc", stride=1):
+    return " ".join(f"{m['step']}:{m[key]:.3f}" for m in logs[::stride])

@@ -1,0 +1,63 @@
+"""Benchmark entry point: python -m benchmarks.run [--full] [--only name,...]
+
+One experiment per paper figure/claim (reduced sizes by default; --full runs
+paper-scale step counts), plus the roofline table from the dry-run artifacts
+when present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+EXPERIMENTS = [
+    ("convergence", "exp_convergence"),
+    ("byz_workers", "exp_byz_workers"),
+    ("byz_servers", "exp_byz_servers"),
+    ("variance_bound", "exp_variance_bound"),
+    ("contraction", "exp_contraction"),
+    ("t_sensitivity", "exp_t_sensitivity"),
+    ("filters", "exp_filters"),
+    ("messages", "exp_messages"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale step counts (slow)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/benchmarks")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out, exist_ok=True)
+
+    import importlib
+    t00 = time.time()
+    for name, mod_name in EXPERIMENTS:
+        if only and name not in only:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.time()
+        res = mod.run(quick=not args.full)
+        print(mod.summarize(res))
+        print(f"  ({time.time()-t0:.1f}s)\n")
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump(res, f, indent=1, default=float)
+
+    # roofline table (if the dry-run has been run)
+    try:
+        from repro.launch import roofline
+        rows = roofline.full_table()
+        ok_rows = [r for r in rows if "skipped" not in r]
+        if ok_rows:
+            print("[roofline] single-pod baseline (naive engine):")
+            print(roofline.format_table(rows))
+    except Exception as e:  # noqa: BLE001
+        print(f"[roofline] unavailable: {e}")
+    print(f"\ntotal {time.time()-t00:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

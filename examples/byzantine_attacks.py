@@ -1,0 +1,54 @@
+"""Attack gallery: what breaks vanilla averaging, and what ByzSGD absorbs.
+
+For each attack we train twice — once with the non-resilient `mean` GAR (the
+classical parameter-server baseline) and once with ByzSGD's MDA — and print
+final accuracies side by side.
+
+    PYTHONPATH=src python examples/byzantine_attacks.py
+"""
+import jax
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.attacks import ByzantineSpec
+from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
+from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.optim.schedules import inverse_linear
+
+MIX = MixtureSpec(n_classes=10, dim=32)
+
+
+def train(gar: str, byz: ByzantineSpec, steps: int = 120) -> float:
+    init, loss, accuracy = make_mlp_problem(dim=32, hidden=64)
+    cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
+                       T=10, gar=gar, byz=byz)
+    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
+    state = sim.init_state(jax.random.PRNGKey(0))
+    stream, eval_set = classification_stream(0, MIX, 9, 25, steps)
+    ex, ey = eval_set(2048)
+    state, _ = sim.run(state, stream)
+    return float(accuracy(jax.tree.map(lambda l: l[0], state.params), ex, ey))
+
+
+def main():
+    attacks = {
+        "none": ByzantineSpec(),
+        "reversed x10": ByzantineSpec(worker_attack="reversed",
+                                      n_byz_workers=2,
+                                      attack_kwargs=(("scale", 10.0),),
+                                      equivocate=True),
+        "ALIE": ByzantineSpec(worker_attack="alie", n_byz_workers=2,
+                              equivocate=True),
+        "sign flip": ByzantineSpec(worker_attack="sign_flip", n_byz_workers=2,
+                                   equivocate=True),
+    }
+    print(f"{'attack':14s} {'mean (vanilla)':>15s} {'MDA (ByzSGD)':>14s}")
+    for name, byz in attacks.items():
+        a_mean = train("mean", byz)
+        a_mda = train("mda", byz)
+        print(f"{name:14s} {a_mean:15.3f} {a_mda:14.3f}")
+    print("\naveraging 'does not tolerate a single corrupted input' (paper "
+          "§1); MDA does.")
+
+
+if __name__ == "__main__":
+    main()

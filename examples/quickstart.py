@@ -1,0 +1,47 @@
+"""Quickstart: Byzantine-resilient training in ~30 lines.
+
+Runs ByzSGD (the paper's asynchronous variant) on a synthetic classification
+task with 9 workers / 5 servers, 2 of the workers mounting the ALIE attack —
+and converges anyway.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.attacks import ByzantineSpec
+from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
+from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.optim.schedules import inverse_linear
+
+
+def main():
+    mix = MixtureSpec(n_classes=10, dim=32)
+    init, loss, accuracy = make_mlp_problem(dim=32, hidden=64)
+
+    cfg = ByzSGDConfig(
+        n_workers=9, f_workers=2,      # n_w >= 3 f_w + 1
+        n_servers=5, f_servers=1,      # n_ps >= 3 f_ps + 2
+        T=10,                          # DMC gather every T steps
+        gar="mda",                     # Minimum-Diameter Averaging
+        byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2,
+                          equivocate=True),
+    )
+    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
+    state = sim.init_state(jax.random.PRNGKey(0))
+
+    stream, eval_set = classification_stream(seed=0, spec=mix,
+                                             n_workers=cfg.n_workers,
+                                             batch_per_worker=25, steps=150)
+    ex, ey = eval_set(2048)
+    state, logs = sim.run(state, stream, metrics_fn=lambda s: {
+        "acc": float(accuracy(jax.tree.map(lambda l: l[0], s.params), ex, ey))},
+        metrics_every=25)
+    for m in logs:
+        print(f"step {m['step']:4d}  accuracy {m['acc']:.3f}")
+    print("\n2/9 workers ran the ALIE attack the whole time — MDA + "
+          "scatter/gather absorbed it.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end distributed ByzSGD LM training (the launch/train.py driver).
+
+Trains a transformer with the full distributed protocol — per-group replicas,
+masked-Median pulls, MDA aggregation, DMC gathers, checkpoint/restart — on 8
+forced host devices (stand-ins for pod slices).
+
+  # tiny model (fast demo)
+  PYTHONPATH=src python examples/train_lm_distributed.py
+  # ~100M-parameter model, a few hundred steps (several hours on 1 CPU core;
+  # sized for a real accelerator host)
+  PYTHONPATH=src python examples/train_lm_distributed.py --scale 100m --steps 300
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.argv0 = sys.argv[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--attack", default=None,
+                    help="e.g. alie (worker attack to inject)")
+    args = ap.parse_args()
+
+    from repro.launch import train as train_mod
+
+    argv = ["--arch", "phi4-mini-3.8b", "--steps", str(args.steps),
+            "--mesh", "4x2", "--groups", "4", "--T", "10",
+            "--ckpt-dir", "/tmp/byzsgd_ckpt", "--ckpt-every", "25"]
+    if args.scale == "tiny":
+        argv += ["--reduced", "--seq", "64", "--batch-per-group", "4"]
+    else:
+        # ~100M: reduced topology but production-ish width
+        argv += ["--reduced", "--seq", "256", "--batch-per-group", "4"]
+        from repro.models import registry
+        orig = registry.get_bundle
+
+        def patched(arch_id, reduced=False, depth=None, **kw):
+            return orig(arch_id, reduced=reduced, depth=depth,
+                        n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+                        d_ff=3072, vocab=8192, head_dim=64, **kw)
+
+        registry.get_bundle = patched
+    if args.attack:
+        argv += ["--worker-attack", args.attack, "--n-byz", "1"]
+    train_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Device-agnostic, elastic, Byzantine-aware checkpointing.
+
+Design goals for 1000+-node runnability:
+  * **Device-agnostic**: leaves are saved as logical (unsharded) arrays plus a
+    JSON manifest (step, tree structure, dtypes). Loading re-shards onto
+    whatever mesh the restarted job has — elastic scaling across restarts.
+  * **Sharded writes**: each leaf is a separate .npy (a real multi-host
+    deployment writes per-host shards; single-process here writes whole leaves
+    — the format is identical either way, so restore logic is shared).
+  * **Byzantine-safe restore**: ByzSGD state carries one replica per server
+    group. ``restore_consolidated`` applies coordinate-wise median across the
+    replica axis so a corrupted/stale replica in the checkpoint is outvoted —
+    the checkpoint-level analogue of DMC.
+  * **Atomicity**: writes go to ``<dir>.tmp`` then rename; interrupted saves
+    never shadow the last good checkpoint (crash-restart safety).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_paths(tree):
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in paths_leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, state_tree) -> str:
+    """Atomically save a pytree checkpoint. Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in _leaf_paths(state_tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][name] = {"file": fname, "dtype": str(arr.dtype),
+                                    "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; re-shard with `shardings`
+    (a matching pytree of NamedSharding or None -> default placement).
+    Elastic: the stored logical shapes must match, the mesh need not."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [n for n, _ in _leaf_paths(like_tree)]
+    leaves = []
+    for n in names:
+        info = manifest["leaves"][n]
+        arr = np.load(os.path.join(d, info["file"]))
+        leaves.append(arr)
+    treedef = jax.tree.structure(like_tree)
+    restored = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s) if s is not None else jnp.asarray(a),
+            restored, shardings)
+    else:
+        restored = jax.tree.map(jnp.asarray, restored)
+    return restored, manifest["step"]
+
+
+def restore_consolidated(ckpt_dir: str, step: int, like_tree, *,
+                         replica_axis: int = 0):
+    """Median-of-replicas restore: collapse the leading server-replica axis
+    with a coordinate-wise median (Byzantine-corrupted replica is outvoted)."""
+    stacked, s = restore(ckpt_dir, step, like_tree)
+    collapsed = jax.tree.map(
+        lambda l: (jnp.median(l.astype(jnp.float32),
+                              axis=replica_axis).astype(l.dtype)
+                   if l.ndim > replica_axis else l),
+        stacked)
+    return collapsed, s

@@ -1,0 +1,53 @@
+"""Small reference models for the paper-claim reproduction experiments.
+
+The paper's testbed models (MNIST_CNN ~80k params, CifarNet ~1.8M) are CPU-scale;
+we mirror that scale with an MLP / tiny-CNN over the synthetic mixture task
+(datasets are not vendored offline — see data/pipeline.py docstring).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key: jax.Array, dim: int = 64, hidden: int = 128,
+             n_classes: int = 10, depth: int = 2):
+    params = {}
+    sizes = [dim] + [hidden] * depth + [n_classes]
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def mlp_apply(params, x):
+    n = len(params) // 2
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, batch, l2: float = 1e-4):
+    """Cross-entropy + L2 (the paper's Assumption 6 needs a regulariser)."""
+    x, y = batch
+    logits = mlp_apply(params, x)
+    ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+    reg = sum(jnp.sum(p ** 2) for p in jax.tree.leaves(params))
+    return ce + l2 * reg
+
+
+def mlp_accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(mlp_apply(params, x), axis=-1) == y)
+
+
+def make_mlp_problem(dim: int = 64, hidden: int = 128, n_classes: int = 10,
+                     depth: int = 2, l2: float = 1e-4):
+    init = partial(mlp_init, dim=dim, hidden=hidden, n_classes=n_classes,
+                   depth=depth)
+    loss = partial(mlp_loss, l2=l2)
+    return init, loss, mlp_accuracy

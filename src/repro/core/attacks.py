@@ -1,0 +1,188 @@
+"""Byzantine attack library.
+
+Gradient attacks (Byzantine *workers*) and model attacks (Byzantine *servers*),
+matching the adversarial behaviours evaluated in the paper (§6 + Fig. 5/6):
+
+  workers: reversed gradients, random, ALIE ("a little is enough", Baruch et
+           al. 2019 — the paper's headline worker attack), sign-flip, zero.
+  servers: Reversed, Partial Drop (10% weights zeroed), Random, LIE
+           (per-weight multiplicative z, |z-1| small; z = 1.035 in the paper).
+
+Every attack maps the *honest* stack [h, d] (what the adversary can observe —
+the paper assumes an omniscient adversary) to a Byzantine payload. The
+``equivocate`` wrapper yields per-destination payloads (a Byzantine node may
+send different vectors to different receivers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from statistics import NormalDist
+
+
+def reversed_attack(honest: jax.Array, key: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    """Send -scale * mean(honest): the classic divergence attack."""
+    del key
+    return -scale * jnp.mean(honest, axis=0)
+
+
+def random_attack(honest: jax.Array, key: jax.Array, *, scale: float | None = None) -> jax.Array:
+    """Replace the payload by Gaussian noise matched (by default) to the honest norm."""
+    m = jnp.mean(honest, axis=0)
+    s = jnp.linalg.norm(m) / jnp.sqrt(m.size) if scale is None else scale
+    return s * jax.random.normal(key, m.shape, m.dtype)
+
+def partial_drop_attack(honest: jax.Array, key: jax.Array, *, drop: float = 0.1) -> jax.Array:
+    """Zero a random ``drop`` fraction of coordinates (paper: unreliable transport)."""
+    m = jnp.mean(honest, axis=0)
+    keep = jax.random.bernoulli(key, 1.0 - drop, m.shape)
+    return m * keep
+
+
+def lie_attack(honest: jax.Array, key: jax.Array, *, z: float = 1.035) -> jax.Array:
+    """Server LIE: multiply each weight by z with |z-1| ~ 0 (paper Fig. 5)."""
+    del key
+    return z * jnp.mean(honest, axis=0)
+
+
+def sign_flip_attack(honest: jax.Array, key: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    del key
+    return -scale * jnp.sign(jnp.mean(honest, axis=0)) * jnp.mean(jnp.abs(honest), axis=0)
+
+
+def zero_attack(honest: jax.Array, key: jax.Array) -> jax.Array:
+    del key
+    return jnp.zeros(honest.shape[1:], honest.dtype)
+
+
+def alie_zmax(n: int, f: int) -> float:
+    """ALIE amplitude: z s.t. the shifted vector still looks like a majority
+    member. phi^-1((n - floor(n/2+1)) / (n - f)) per Baruch et al. 2019.
+    Pure-Python (stdlib) so it stays a static constant under jit tracing."""
+    s = (n // 2) + 1 - f
+    frac = (n - f - s) / (n - f)
+    frac = min(max(frac, 1e-6), 1 - 1e-6)
+    return float(NormalDist().inv_cdf(frac))
+
+
+def alie_attack(honest: jax.Array, key: jax.Array, *, n: int, f: int,
+                z: float | None = None) -> jax.Array:
+    """A-Little-Is-Enough: mean + z_max * per-coordinate std of honest inputs.
+
+    The paper applies "the strongest possible change in gradients' coordinates"
+    (§6, Byzantine workers) — this is that attack.
+    """
+    del key
+    zv = alie_zmax(n, f) if z is None else z
+    mu = jnp.mean(honest, axis=0)
+    sd = jnp.std(honest, axis=0)
+    return mu + zv * sd
+
+
+GRADIENT_ATTACKS: dict[str, Callable] = {
+    "reversed": reversed_attack,
+    "random": random_attack,
+    "alie": alie_attack,
+    "sign_flip": sign_flip_attack,
+    "zero": zero_attack,
+}
+
+MODEL_ATTACKS: dict[str, Callable] = {
+    "reversed": reversed_attack,
+    "partial_drop": partial_drop_attack,
+    "random": random_attack,
+    "lie": lie_attack,
+}
+
+
+@dataclass(frozen=True)
+class ByzantineSpec:
+    """Which slices are Byzantine and how they attack.
+
+    ``n_byz_workers``/``n_byz_servers`` actual adversaries (<= declared f).
+    Worker indices [n_w - n_byz_w, n_w) and server indices [n_ps - n_byz_s, n_ps)
+    are Byzantine (w.l.o.g., as in the paper's notation §B.1).
+    """
+    worker_attack: str | None = None
+    server_attack: str | None = None
+    n_byz_workers: int = 0
+    n_byz_servers: int = 0
+    equivocate: bool = False  # per-destination payloads
+    attack_kwargs: tuple = ()  # extra (name, value) pairs, hashable
+
+    def kwargs(self) -> dict:
+        return dict(self.attack_kwargs)
+
+    @property
+    def equivocates_models(self) -> bool:
+        return bool(self.equivocate and self.server_attack and self.n_byz_servers)
+
+    @property
+    def equivocates_grads(self) -> bool:
+        return bool(self.equivocate and self.worker_attack and self.n_byz_workers)
+
+
+def _inject_stack(stack: jax.Array, fn, kw: dict, n_byz: int, key: jax.Array,
+                  n_receivers: int | None) -> jax.Array:
+    """Core injector for one leaf [n, ...] -> [n, ...] or [n_recv, n, ...]."""
+    n = stack.shape[0]
+    h = n - n_byz
+    honest = stack[:h]
+
+    def payload(k):
+        return fn(honest, k, **kw)
+
+    if n_receivers is not None:  # equivocation: distinct payload per receiver
+        keys = jax.random.split(key, n_receivers * n_byz)
+        keys = keys.reshape((n_receivers, n_byz) + keys.shape[1:])
+        pl = jax.vmap(jax.vmap(payload))(keys)  # [n_recv, n_byz, ...]
+        out = jnp.broadcast_to(stack, (n_receivers,) + stack.shape)
+        return out.at[:, h:].set(pl.astype(stack.dtype))
+    keys = jax.random.split(key, n_byz)
+    pl = jax.vmap(payload)(keys)
+    return stack.at[h:].set(pl.astype(stack.dtype))
+
+
+def _inject_tree(tree, attack: str | None, registry: dict, kw: dict, n_byz: int,
+                 key: jax.Array, n_receivers: int | None):
+    """Tree-aware injection. Leaves carry a leading stack axis [n, ...].
+
+    All attacks in the registries are coordinate-wise functions of the honest
+    stack, so applying them leaf-by-leaf is *exactly* equivalent to applying
+    them to the flattened vector (the only exception, random_attack's
+    norm-matched scale, becomes per-leaf norm-matched — equally adversarial).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    if not attack or n_byz == 0:
+        if n_receivers is not None:
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n_receivers,) + l.shape), tree)
+        return tree
+    fn = registry[attack]
+    kw = dict(kw)
+    if attack == "alie":
+        kw.setdefault("n", n)
+        kw.setdefault("f", n_byz)
+    out = [_inject_stack(l, fn, kw, n_byz, jax.random.fold_in(key, i), n_receivers)
+           for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def inject_gradients(grads, spec: ByzantineSpec, key: jax.Array,
+                     n_receivers: int | None = None):
+    """Replace the last n_byz_workers entries of the [n_w, ...] gradient stack
+    (pytree-aware). With ``n_receivers`` (equivocation) returns leaves
+    [n_recv, n_w, ...]."""
+    return _inject_tree(grads, spec.worker_attack, GRADIENT_ATTACKS,
+                        spec.kwargs(), spec.n_byz_workers, key, n_receivers)
+
+
+def inject_models(models, spec: ByzantineSpec, key: jax.Array,
+                  n_receivers: int | None = None):
+    """Same for server parameter stacks [n_ps, ...] (pytree-aware)."""
+    return _inject_tree(models, spec.server_attack, MODEL_ATTACKS,
+                        spec.kwargs(), spec.n_byz_servers, key, n_receivers)

@@ -1,0 +1,75 @@
+"""Model-legitimacy filters for the synchronous ByzSGD variant (paper §5).
+
+Workers pull ONE model per step (round-robin over servers) and validate it:
+
+* **Lipschitz filter** — empirical Lipschitz coefficient
+  k = ||g_{t+1} - g_t|| / ||theta_local - theta_prev|| must lie within the
+  (n_ps - f_ps)/n_ps quantile of the worker's history of accepted coefficients.
+* **Outliers filter** — the pulled model must be within the Eq. (14) ball of the
+  locally-speculated model theta_local = theta_prev - eta * g_t.
+
+Both are required: the Lipschitz filter bounds growth *direction*, the Outliers
+filter bounds *distance* (each alone is attackable — paper §C.2.3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LipschitzHistory(NamedTuple):
+    """Fixed-size ring buffer of past accepted Lipschitz coefficients."""
+    buf: jax.Array   # [H] float32, NaN = empty
+    idx: jax.Array   # scalar int32 write cursor
+
+    @staticmethod
+    def create(horizon: int = 128) -> "LipschitzHistory":
+        return LipschitzHistory(jnp.full((horizon,), jnp.nan, jnp.float32),
+                                jnp.zeros((), jnp.int32))
+
+    def push(self, k: jax.Array) -> "LipschitzHistory":
+        h = self.buf.shape[0]
+        return LipschitzHistory(self.buf.at[self.idx % h].set(k), self.idx + 1)
+
+
+def lipschitz_coefficient(new_grad, old_grad, local_model, old_model) -> jax.Array:
+    """k = ||g_{t+1}-g_t|| / ||theta^{(j(l))}_{t+1} - theta^{(j)}_t|| (tree-aware)."""
+    num = jnp.sqrt(sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
+                       for a, b in zip(jax.tree.leaves(new_grad), jax.tree.leaves(old_grad))))
+    den = jnp.sqrt(sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
+                       for a, b in zip(jax.tree.leaves(local_model), jax.tree.leaves(old_model))))
+    return num / jnp.maximum(den, 1e-20)
+
+
+def lipschitz_pass(k: jax.Array, hist: LipschitzHistory, n_ps: int, f_ps: int) -> jax.Array:
+    """k <= quantile_{(n_ps-f_ps)/n_ps}{K}. Accepts while history is empty."""
+    qlevel = 100.0 * (n_ps - f_ps) / n_ps
+    kp = jnp.nanpercentile(hist.buf, qlevel)
+    return jnp.isnan(kp) | (k <= kp)
+
+
+def outliers_bound(t: jax.Array, big_t: int, eta_anchor: jax.Array,
+                   gnorm_anchor: jax.Array, n_w: int, f_w: int) -> jax.Array:
+    """Eq. (14): eta_{T(t mod T)} ||g_{T(t mod T)}|| *
+    ( (3T+2)(n_w-f_w) / 4f_w + 2((t-1) mod T) ).
+
+    ``eta_anchor``/``gnorm_anchor`` are the learning rate / gradient norm at the
+    last gather step (the anchor of the current scatter phase).
+    """
+    fw = max(f_w, 1)
+    growth = (3.0 * big_t + 2.0) * (n_w - f_w) / (4.0 * fw) + 2.0 * ((t - 1) % big_t)
+    return eta_anchor * gnorm_anchor * growth
+
+
+def outliers_pass(pulled_model, local_model, bound: jax.Array) -> jax.Array:
+    dist = jnp.sqrt(sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
+                        for a, b in zip(jax.tree.leaves(pulled_model),
+                                        jax.tree.leaves(local_model))))
+    return dist < bound
+
+
+def safe_T(lipschitz_l: float, eta1: float) -> int:
+    """Paper Eq. (13): T <= 1 / (3 * l * eta_1) — the max scatter length."""
+    return max(int(1.0 / (3.0 * lipschitz_l * eta1)), 1)

@@ -1,0 +1,678 @@
+"""Distributed ByzSGD on a TPU mesh (pjit formulation).
+
+Maps the paper's server/worker protocol onto the ('rep', 'fsdp', 'model') view
+of the production mesh (launch/mesh.py):
+
+  * 'rep' indexes G = n_groups co-located worker+server groups (the failure
+    domains). Group g holds server replica theta^(g) (ZeRO-sharded over its
+    'fsdp' x 'model' chips) and computes worker gradient g^(g) on its 1/G of
+    the global batch.
+  * scatter step  = pull (per-worker masked Median over delivered replicas)
+                  -> per-group gradient (vmap over 'rep')
+                  -> MDA per server group over its delivered gradient quorum
+                  -> local SGD update.
+  * gather step   = DMC: masked Median across server replicas (every T steps).
+
+Asynchrony = per-step delivery quorums (core/quorum.py). Byzantine behaviour is
+injected for tests/benchmarks and *excluded from roofline lowers* (a real
+adversary costs nothing extra on the honest path).
+
+Engines:
+  * 'naive'   — baseline, paper-faithful collective volume: gradients/replicas
+    are all-gathered across 'rep' (volume (G-1)/G * G * P per step, like the
+    paper's broadcast-to-all message pattern), streamed layer-by-layer to bound
+    transients.
+  * 'sharded' — beyond-paper: aggregations stay as reductions over 'rep'
+    (XLA lowers to reduce-scatter/all-reduce, ~2P per step) and the MDA subset
+    selection is driven by the leaf-partial Gram matrix (exact distances, tiny
+    [G,G] psum). See DESIGN.md §2 and EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import gars
+from .attacks import ByzantineSpec, inject_gradients, inject_models
+from .quorum import receiver_quorum_indices
+from ..models.unroll_ctx import map_1 as umap
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ProtocolConfig:
+    n_groups: int                 # G = n_workers = n_servers (failure domains)
+    f_workers: int
+    f_servers: int
+    q_workers: int
+    q_servers: int
+    T: int = 50                   # gather every T steps
+    grad_microbatches: int = 1    # sequential accumulation per worker step
+    engine: str = "sharded"       # 'naive' (paper volume) | 'sharded'
+    pull: str = "median"          # 'median' (async variant) | 'roundrobin'
+                                  # (sync variant §5: one model/step via
+                                  # collective-permute + distance filter)
+    exchange_dtype: str = "float32"
+    mda_exact_limit: int = 200_000
+    chunk_bytes: int = 256 * 2**20   # stream leaves bigger than this over dim 1
+    byz: ByzantineSpec = field(default_factory=ByzantineSpec)
+
+    @staticmethod
+    def derive(R: int, divisor: int = 1, *, T: int = 50, engine: str = "sharded",
+               exchange_dtype: str = "float32", grad_microbatches: int = 1,
+               pull: str = "median",
+               byz: ByzantineSpec | None = None) -> "ProtocolConfig":
+        """Default resilience parameters for G = R // divisor groups:
+        f_w = (G-1)//3, f_ps = (G-2)//3 (the paper's asymptotically-optimal 1/3
+        bounds), full-minus-f quorums."""
+        G = R // divisor
+        f_w = max((G - 1) // 3, 0)
+        f_ps = max((G - 2) // 3, 0)
+        q_w = G - f_w
+        q_ps = max(G - f_ps, min(2 * f_ps + 2, G))
+        return ProtocolConfig(n_groups=G, f_workers=f_w, f_servers=f_ps,
+                              q_workers=q_w, q_servers=q_ps, T=T, engine=engine,
+                              exchange_dtype=exchange_dtype,
+                              grad_microbatches=grad_microbatches, pull=pull,
+                              byz=byz or ByzantineSpec())
+
+
+class ByzState(NamedTuple):
+    params: Any          # pytree, leaves [G, ...]
+    t: jax.Array         # scalar int32
+    key: jax.Array       # protocol PRNG (quorums / attacks)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules for replica-stacked leaves
+# ---------------------------------------------------------------------------
+
+
+# Explicit per-leaf layout table (Megatron conventions), matched by the leaf's
+# final path component. COLUMN-parallel ([.., D_in, D_out]): 'model' on the
+# OUTPUT dim (matches head-sharded attention activations and F-sharded MLP
+# intermediates). ROW-parallel ([.., D_out_contraction, D]): 'model' on the
+# contraction dim (output psum/reduce-scatter). Tables: 'model' on vocab.
+# 'fsdp' (ZeRO intra-group axis, K>1 archs) takes the complementary dim.
+# Heuristic placement caused layout churn ("involuntary full remat") — see
+# EXPERIMENTS.md §Perf iteration log.
+_COL_LEAVES = {"w_gate", "w_up", "cWk"}
+# ROW for: contraction-sharded outputs (wo/w_down/...), projections whose
+# outputs reshape across non-divisible head boundaries (rwkv mixers), and
+# mamba's in_proj (its output is segment-sliced, so output sharding would cut
+# across segment boundaries -> SPMD relayout churn / SIGFPE).
+_ROW_LEAVES = {"wo", "w_down", "out_proj", "Wo", "cWv", "wB", "in_proj",
+               "Wr", "Wk", "Wv", "Wg", "cWr", "wA"}
+_TABLE_LEAVES = {"table", "pos_dec"}
+# wq/wk/wv are COL iff the (kv-)head count divides |model| (else the head
+# reshape fights the flat output sharding); decided per-arch via `overrides`.
+
+
+def _place(body, picks, M, K):
+    """picks: ((axis_name, dim_index), ...) — applied iff divisible."""
+    spec = [None] * len(body)
+    for name, idx in picks:
+        size = M if name == "model" else K
+        if size <= 1:
+            continue
+        i = idx % len(body)
+        if spec[i] is None and body[i] % size == 0 and body[i] >= size:
+            spec[i] = name
+    return spec
+
+
+def leaf_spec(shape: tuple[int, ...], mesh, *, leading_rep: bool = True,
+              name: str = "", overrides: dict | None = None) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    M, K = sizes["model"], sizes["fsdp"]
+    body = list(shape[1:]) if leading_rep else list(shape)
+    mode = (overrides or {}).get(name)
+    if mode == "col" and len(body) >= 2:
+        spec = _place(body, (("model", -1), ("fsdp", -2)), M, K)
+    elif mode == "row" and len(body) >= 2:
+        spec = _place(body, (("model", -2), ("fsdp", -1)), M, K)
+    elif name in _COL_LEAVES and len(body) >= 2:
+        spec = _place(body, (("model", -1), ("fsdp", -2)), M, K)
+    elif name in _ROW_LEAVES and len(body) >= 2:
+        spec = _place(body, (("model", -2), ("fsdp", -1)), M, K)
+    elif name in _TABLE_LEAVES and len(body) >= 2:
+        spec = _place(body, (("model", -2), ("fsdp", -1)), M, K)
+    else:
+        # fallback: largest divisible dims (covers odd leaves; 1D replicate)
+        spec = [None] * len(body)
+        order = sorted(range(len(body)), key=lambda i: -body[i])
+        m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M
+                     and len(body) >= 2), None)
+        if m_at is not None:
+            spec[m_at] = "model"
+        k_at = next((i for i in order
+                     if i != m_at and body[i] % K == 0 and body[i] >= K), None)
+        if k_at is not None and K > 1 and len(body) >= 2:
+            spec[k_at] = "fsdp"
+    if leading_rep:
+        return P("rep", *spec)
+    return P(*spec)
+
+
+def attn_overrides(cfg, mesh) -> dict:
+    """wq is COL-parallel when heads divide |model| (one x-gather feeds a
+    local matmul with head-sharded output — ~3x cheaper than ROW's full-size
+    output psum, §Perf iteration 11). wk/wv stay ROW-parallel always: COL +
+    GQA kv reshapes trigger an XLA SPMD SIGFPE on this backend (iteration 9).
+    """
+    # COL wq re-triggers the SIGFPE even for divisible heads (iteration 11,
+    # REFUTED) — all three stay ROW on this backend.
+    del mesh
+    return {"wq": "row", "wk": "row", "wv": "row"}
+
+
+def state_shardings(state_shapes, mesh, overrides: dict | None = None):
+    """NamedShardings for a ByzState shape-tree (per-leaf-name layout)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes.params)
+    out = []
+    for path, leaf in flat:
+        if leaf.ndim == 0 or leaf.size <= 2:
+            out.append(NamedSharding(mesh, P()))
+            continue
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+        out.append(NamedSharding(mesh, leaf_spec(leaf.shape, mesh, name=name,
+                                                 overrides=overrides)))
+    params = jax.tree_util.tree_unflatten(treedef, out)
+    scalar = NamedSharding(mesh, P())
+    return ByzState(params=params, t=scalar, key=scalar)
+
+
+def body_spec(body_shape: tuple[int, ...], mesh) -> tuple:
+    """Sharding tuple for a replica-body (no leading axes): 'model' on the
+    largest divisible dim, 'fsdp' on the next."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    M, K = sizes["model"], sizes["fsdp"]
+    body = list(body_shape)
+    spec: list = [None] * len(body)
+    order = sorted(range(len(body)), key=lambda i: -body[i])
+    m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M), None)
+    if m_at is not None:
+        spec[m_at] = "model"
+    k_at = next((i for i in order
+                 if i != m_at and body[i] % K == 0 and body[i] >= K), None)
+    if k_at is not None and K > 1:
+        spec[k_at] = "fsdp"
+    return tuple(spec)
+
+
+def _replicaless_spec(shape, mesh) -> P:
+    """Sharding for consolidated (serving) params: no 'rep' axis; combine
+    ('rep','fsdp') on the fsdp-eligible dim for maximal spread."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    M, RK = sizes["model"], sizes["rep"] * sizes["fsdp"]
+    body = list(shape)
+    spec: list = [None] * len(body)
+    order = sorted(range(len(body)), key=lambda i: -body[i])
+    m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M), None)
+    if m_at is not None:
+        spec[m_at] = "model"
+    k_at = next((i for i in order
+                 if i != m_at and body[i] % RK == 0 and body[i] >= RK), None)
+    if k_at is not None:
+        spec[k_at] = ("rep", "fsdp")
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# chunked leaf streaming (bounds all-gather transients on huge leaves)
+# ---------------------------------------------------------------------------
+
+
+def _map_dim1(fn, *leaves, mesh=None):
+    """Apply fn across dim-1 slices of [G, L, ...] leaves.
+
+    Implemented with fori_loop + dynamic_slice on the (unsharded) layer dim —
+    NO transposes of sharded tensors (moveaxis of a ('rep', None, 'model')
+    leaf triggers XLA SPMD "involuntary full rematerialization" = per-device
+    replication of the whole stack). The loop-carried accumulator is
+    explicitly constrained to the replica-stacked layout (otherwise XLA
+    replicates it). Under the dry-run unroll context this becomes a python
+    loop so cost_analysis counts every iteration.
+    """
+    from ..models import unroll_ctx
+    L = leaves[0].shape[1]
+
+    def slice_at(i):
+        return tuple(jnp.squeeze(jax.lax.dynamic_slice_in_dim(l, i, 1, axis=1), 1)
+                     for l in leaves)
+
+    out0 = jax.eval_shape(fn, *(jax.eval_shape(lambda l: jnp.squeeze(l[:, :1], 1), l)
+                                for l in leaves))
+    if unroll_ctx.active():
+        chunks = [fn(*slice_at(i)) for i in range(L)]
+        return jnp.stack(chunks, axis=1)
+
+    def body(i, acc):
+        res = fn(*slice_at(i))
+        return jax.lax.dynamic_update_slice_in_dim(acc, res[:, None], i, axis=1)
+
+    init = jnp.zeros((out0.shape[0], L) + out0.shape[1:], out0.dtype)
+    if mesh is not None:
+        init = jax.lax.with_sharding_constraint(
+            init, NamedSharding(mesh, P("rep", None,
+                                        *body_spec(out0.shape[1:], mesh))))
+    return jax.lax.fori_loop(0, L, body, init)
+
+
+_STREAM_MAX_DIM1 = 512  # layer-stack dims stream one layer at a time
+_STREAM_N_CHUNKS = 16   # wide dims (vocab tables) stream in 16 chunks
+
+
+def _map_last_chunks(fn, *leaves, n_chunks: int, mesh=None):
+    """Chunked streaming over the LAST (unsharded) dim — used for wide tables
+    (embeddings: [G, V('model'), D]); slicing the sharded V dim would localise
+    each chunk to a single device, so we slice D instead."""
+    from ..models import unroll_ctx
+    ax = leaves[0].ndim - 1
+    D = leaves[0].shape[ax]
+    csize = D // n_chunks
+
+    def slice_at(i):
+        return tuple(jax.lax.dynamic_slice_in_dim(l, i * csize, csize, axis=ax)
+                     for l in leaves)
+
+    out0 = jax.eval_shape(fn, *(jax.eval_shape(
+        lambda l: jax.lax.slice_in_dim(l, 0, csize, axis=ax), l)
+        for l in leaves))
+    if unroll_ctx.active():
+        return jnp.concatenate([fn(*slice_at(i)) for i in range(n_chunks)],
+                               axis=ax)
+
+    def body(i, acc):
+        res = fn(*slice_at(i))
+        return jax.lax.dynamic_update_slice_in_dim(acc, res, i * csize, axis=ax)
+
+    full_shape = out0.shape[:ax] + (D,)
+    init = jnp.zeros(full_shape, out0.dtype)
+    if mesh is not None:
+        init = jax.lax.with_sharding_constraint(
+            init, NamedSharding(mesh, P("rep", *body_spec(full_shape[1:], mesh))))
+    return jax.lax.fori_loop(0, n_chunks, body, init)
+
+
+def _leaf_stream(fn, chunk_bytes: int, mesh=None):
+    """Wrap a per-leaf op to stream over the layer-stack (or table-row) dim
+    when large."""
+    def apply(*leaves):
+        l0 = leaves[0]
+        big = l0.size * l0.dtype.itemsize > chunk_bytes
+        if l0.ndim >= 3 and big and l0.shape[1] <= _STREAM_MAX_DIM1:
+            return _map_dim1(fn, *leaves, mesh=mesh)
+        if (l0.ndim >= 3 and big
+                and l0.shape[-1] % _STREAM_N_CHUNKS == 0):
+            return _map_last_chunks(fn, *leaves, n_chunks=_STREAM_N_CHUNKS,
+                                    mesh=mesh)
+        return fn(*leaves)
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# protocol ops
+# ---------------------------------------------------------------------------
+
+
+def masked_median_pull(params, masks, cfg: ProtocolConfig, mesh=None):
+    """Per-receiver masked coordinate-wise Median over the replica axis.
+
+    params leaves [G, ...]; masks [G_recv, G_send] bool. Returns leaves
+    [G_recv, ...] — worker/server g's aggregated view of the replicas.
+    """
+    def med_chunk(chunk):  # [G, ...]
+        def one(mask):
+            return gars.masked_coordinate_median(chunk.astype(jnp.float32), mask)
+        out = jax.vmap(one)(masks).astype(chunk.dtype)
+        if mesh is not None:
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P("rep", *body_spec(out.shape[1:], mesh))))
+        return out
+
+    op = _leaf_stream(med_chunk, cfg.chunk_bytes, mesh)
+    return jax.tree.map(op, params)
+
+
+def _gram_spec(shape, mesh) -> P:
+    """Layout for the Gram contraction: the [G, G] output cannot be 'rep'-
+    sharded on both dims, so we first all-to-all the leaf — replica axis
+    replicated, 'model'/'rep'/'fsdp' spread over *body* dims — making the
+    G x G dot fully local with a tiny psum over the sharded contraction dims.
+    Without this, the SPMD partitioner all-gathers the entire replica stack
+    per device (observed: 18 GiB temps on internlm2)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    order_axes = (("model", sizes["model"]), ("rep", sizes["rep"]),
+                  ("fsdp", sizes["fsdp"]))
+    body = list(shape[1:])
+    spec: list = [None] * len(body)
+    order = sorted(range(len(body)), key=lambda i: -body[i])
+    taken: set = set()
+    for ax, size in order_axes:
+        if size <= 1:
+            continue
+        at = next((i for i in order
+                   if i not in taken and body[i] % size == 0 and body[i] >= size),
+                  None)
+        if at is not None:
+            spec[at] = ax
+            taken.add(at)
+    return P(None, *spec)
+
+
+def _chunk_gram(chunk, mesh=None):
+    del mesh
+    lf = chunk.astype(jnp.float32)
+    axes = tuple(range(1, lf.ndim))
+    # dot_general with multi-dim contraction — NO flattening reshape
+    # (tensordot reshapes to 2D, which forces XLA to replicate sharded
+    # leaves; dot_general contracts sharded dims directly).
+    return jax.lax.dot_general(lf, lf, ((axes, axes), ((), ())))   # [G, G]
+
+
+def _reduce_stream(fn, leaf, chunk_bytes: int):
+    """Accumulate fn(chunk) over slices of a large leaf: dim-1 for layer
+    stacks, last dim for wide tables (see _leaf_stream for the rationale)."""
+    from ..models import unroll_ctx
+    big = leaf.size * leaf.dtype.itemsize > chunk_bytes
+    G = leaf.shape[0]
+    if leaf.ndim < 3 or not big:
+        return fn(leaf)
+    if leaf.shape[1] <= _STREAM_MAX_DIM1:
+        ax, n_steps, csize = 1, leaf.shape[1], 1
+    elif leaf.shape[-1] % _STREAM_N_CHUNKS == 0:
+        ax = leaf.ndim - 1
+        n_steps = _STREAM_N_CHUNKS
+        csize = leaf.shape[-1] // _STREAM_N_CHUNKS
+    else:
+        return fn(leaf)
+
+    def chunk_at(i):
+        sl = jax.lax.dynamic_slice_in_dim(leaf, i * csize, csize, axis=ax)
+        return jnp.squeeze(sl, 1) if (ax == 1 and csize == 1) else sl
+
+    if unroll_ctx.active():
+        return sum(fn(chunk_at(i)) for i in range(n_steps))
+
+    def body(i, acc):
+        return acc + fn(chunk_at(i))
+
+    return jax.lax.fori_loop(0, n_steps, body, jnp.zeros((G, G), jnp.float32))
+
+
+def tree_gram(grads, mesh=None, chunk_bytes: int = 256 * 2**20) -> jax.Array:
+    """[G, G] Gram matrix over the full flattened gradient.
+
+    Whole-leaf all-to-all (gram_spec: 'rep' moved onto a body dim) + local
+    multi-dim dot + tiny psum. Empirically (EXPERIMENTS.md §Perf iteration
+    log) this is the ONLY variant the SPMD partitioner handles without
+    involuntary replication; per-chunk constraints and plain rep-sharded dots
+    both blow up. Leaves whose bodies cannot host the 'rep' axis fall back to
+    the streamed rep-gather."""
+    total = None
+    for l in jax.tree.leaves(grads):
+        lf = l.astype(jnp.float32)
+        if mesh is not None and lf.ndim >= 2:
+            spec = _gram_spec(lf.shape, mesh)
+            if "rep" in jax.tree.leaves(tuple(spec)):
+                lf = jax.lax.with_sharding_constraint(
+                    lf, NamedSharding(mesh, spec))
+                axes = tuple(range(1, lf.ndim))
+                g = jax.lax.dot_general(lf, lf, ((axes, axes), ((), ())))
+            else:
+                g = _reduce_stream(_chunk_gram, l, chunk_bytes)
+        else:
+            g = _reduce_stream(_chunk_gram, l, chunk_bytes)
+        total = g if total is None else total + g
+    return total
+
+
+def mda_weights(d2: jax.Array, quorum_idx: jax.Array, f: int,
+                exact_limit: int) -> jax.Array:
+    """Per-server MDA selection weights.
+
+    d2: [G, G] squared distances; quorum_idx: [G_recv, q] delivered worker
+    indices per server. Returns [G_recv, G_send] averaging weights (rows sum
+    to 1)."""
+    G = d2.shape[0]
+    q = quorum_idx.shape[1]
+
+    def one(idx):
+        sub = d2[idx][:, idx]                       # [q, q]
+        sel = gars.mda_selection(sub, f, exact_limit=exact_limit)  # [q] bool
+        w = sel.astype(jnp.float32) / max(q - f, 1)
+        return jnp.zeros((G,), jnp.float32).at[idx].set(w)
+
+    return jax.vmap(one)(quorum_idx)
+
+
+def aggregate_gradients(grads, weights, cfg: ProtocolConfig, mesh=None):
+    """G_hat[s] = sum_w weights[s, w] * grads[w]  (leaf-wise, streamed).
+
+    naive engine: materialise the all-gathered gradient stack per chunk
+    (the paper's broadcast-to-all message volume: replicate over 'rep' only,
+    body sharding preserved); sharded engine: leave the contraction to XLA
+    (reduces over 'rep' -> reduce-scatter-style, ~2P bytes)."""
+    dt = jnp.dtype(cfg.exchange_dtype)
+
+    def agg_chunk(chunk):  # [G, ...]
+        c = chunk.astype(dt)
+        if cfg.engine == "naive" and mesh is not None:
+            c = jax.lax.with_sharding_constraint(
+                c, NamedSharding(mesh, P(None, *body_spec(c.shape[1:], mesh))))
+        out = jax.lax.dot_general(weights.astype(dt), c,
+                                  (((1,), (0,)), ((), ())))  # [G_recv, ...]
+        if mesh is not None:
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, P("rep", *body_spec(out.shape[1:], mesh))))
+        return out
+
+    op = _leaf_stream(agg_chunk, cfg.chunk_bytes, mesh)
+    return jax.tree.map(op, grads)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_init_fn(bundle, pcfg: ProtocolConfig):
+    """Returns init(key) -> ByzState with replica-stacked params."""
+    pdt = jnp.dtype(bundle.cfg.param_dtype)
+
+    def init(key):
+        k_model, k_run = jax.random.split(key)
+        p0 = bundle.init(k_model)
+        p0 = jax.tree.map(lambda l: l.astype(pdt), p0)
+        params = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (pcfg.n_groups,) + l.shape), p0)
+        return ByzState(params=params, t=jnp.zeros((), jnp.int32), key=k_run)
+
+    return init
+
+
+def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
+                      with_attack: bool = False, mesh=None):
+    """One ByzSGD scatter step. batch leaves: [G, per_group, ...]."""
+    G = pcfg.n_groups
+
+    overrides = attn_overrides(bundle.cfg, mesh) if mesh is not None else {}
+
+    def _constrain_like_params(tree):
+        if mesh is None:
+            return tree
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, l in flat:
+            if l.ndim >= 1 and l.size > 2:
+                nm = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+                l = jax.lax.with_sharding_constraint(
+                    l, NamedSharding(mesh, leaf_spec(l.shape, mesh, name=nm,
+                                                     overrides=overrides)))
+            out.append(l)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def scatter_step(state: ByzState, batch):
+        key, k_pull, k_push, k_matk, k_gatk = jax.random.split(state.key, 5)
+        eta = lr_schedule(state.t).astype(jnp.float32)
+
+        # 1. worker pull ------------------------------------------------------
+        models = state.params
+        if with_attack and pcfg.byz.server_attack:
+            models = inject_models(models, pcfg.byz, k_matk)
+        if pcfg.pull == "roundrobin":
+            # synchronous variant (paper §5): each worker pulls ONE model via
+            # a ring permutation over 'rep' (lowers to collective-permute,
+            # O(P) vs the Median pull's O((q-1)P)), validated by a distance
+            # filter against the worker's own replica (the Outliers filter of
+            # Eq. 14 anchored locally; on rejection the worker falls back to
+            # its own replica — a conservative, honest model by definition.
+            # The Lipschitz filter needs the previous gradient: carried only
+            # in the faithful simulator, where memory is free).
+            idx = (jnp.arange(G) + state.t + 1) % G
+            pulled = jax.tree.map(lambda l: jnp.take(l, idx, axis=0), models)
+            own = state.params
+            d2g = None
+            n2g = None
+            for pl, ow in zip(jax.tree.leaves(pulled), jax.tree.leaves(own)):
+                ax = tuple(range(1, pl.ndim))
+                d = jnp.sum((pl.astype(jnp.float32)
+                             - ow.astype(jnp.float32)) ** 2, axis=ax)
+                n = jnp.sum(ow.astype(jnp.float32) ** 2, axis=ax)
+                d2g = d if d2g is None else d2g + d
+                n2g = n if n2g is None else n2g + n
+            growth = ((3.0 * pcfg.T + 2.0) * (G - pcfg.f_workers)
+                      / (4.0 * max(pcfg.f_workers, 1)))
+            bound2 = (eta * growth) ** 2 * n2g + 1e-6
+            ok = d2g <= bound2                      # [G] per-worker verdict
+            pulled = jax.tree.map(
+                lambda p, o: jnp.where(
+                    ok.reshape((G,) + (1,) * (p.ndim - 1)), p, o), pulled, own)
+        else:
+            # asynchronous variant: masked Median over the delivered quorum
+            pull_idx = receiver_quorum_indices(k_pull, G, G, pcfg.q_servers)
+            pull_masks = jnp.zeros((G, G), bool).at[
+                jnp.arange(G)[:, None], pull_idx].set(True)
+            pulled = masked_median_pull(models, pull_masks, pcfg, mesh)
+        pulled = jax.tree.map(
+            lambda l: l.astype(jnp.dtype(bundle.cfg.act_dtype))
+            if l.dtype == jnp.float32 else l, pulled)
+
+        # 2. per-group worker gradients (vmap over 'rep'), accumulated over
+        # grad_microbatches sequential micro-steps (bounds activation memory;
+        # the batch arrives with a leading micro axis when n_micro > 1) ------
+        gfn = jax.vmap(jax.grad(bundle.loss),
+                       spmd_axis_name="rep" if mesh is not None else None)
+        if pcfg.grad_microbatches > 1:
+            from ..models import unroll_ctx as _uctx
+
+            if _uctx.active():  # cost-probe: vmap micro-steps (flop-identical)
+                gm = jax.vmap(gfn, in_axes=(None, 0))(pulled, batch)
+                grads = jax.tree.map(
+                    lambda x: jnp.mean(x.astype(jnp.float32), axis=0), gm)
+            else:
+                def micro_body(acc, mb):
+                    g = gfn(pulled, mb)
+                    return jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32)
+                        / pcfg.grad_microbatches, acc, g), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+                zeros = _constrain_like_params(zeros)
+                grads, _ = jax.lax.scan(micro_body, zeros, batch)
+        else:
+            grads = gfn(pulled, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.dtype(pcfg.exchange_dtype)),
+                             grads)
+        grads = _constrain_like_params(grads)
+        if with_attack and pcfg.byz.worker_attack:
+            grads = inject_gradients(grads, pcfg.byz, k_gatk)
+
+        # 3. MDA per server group over its delivered quorum --------------------
+        push_idx = receiver_quorum_indices(k_push, G, G, pcfg.q_workers)
+        d2 = gars.sqdists_from_gram(tree_gram(grads, mesh))
+        weights = mda_weights(d2, push_idx, pcfg.f_workers, pcfg.mda_exact_limit)
+        agg = aggregate_gradients(grads, weights, pcfg, mesh)
+
+        # 4. local SGD update (paper Eq. 2) ------------------------------------
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            state.params, agg)
+        return ByzState(params=new_params, t=state.t + 1, key=key)
+
+    return scatter_step
+
+
+def make_gather_step(pcfg: ProtocolConfig, with_attack: bool = False,
+                     mesh=None):
+    """DMC: servers exchange replicas and apply masked Median (every T steps)."""
+    G = pcfg.n_groups
+
+    def gather_step(state: ByzState):
+        key, k_q, k_atk = jax.random.split(state.key, 3)
+        idx = receiver_quorum_indices(k_q, G, G, pcfg.q_servers,
+                                      include_self=True)
+        masks = jnp.zeros((G, G), bool).at[jnp.arange(G)[:, None], idx].set(True)
+        models = state.params
+        if with_attack and pcfg.byz.server_attack:
+            models = inject_models(models, pcfg.byz, k_atk)
+        new_params = masked_median_pull(models, masks, pcfg, mesh)
+        new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
+                                  new_params, state.params)
+        return ByzState(params=new_params, t=state.t, key=key)
+
+    return gather_step
+
+
+def make_train_step(bundle, pcfg: ProtocolConfig, lr_schedule,
+                    with_attack: bool = False, mesh=None):
+    """Fused step: scatter, then DMC gather iff t % T == 0 (lax.cond)."""
+    scatter = make_scatter_step(bundle, pcfg, lr_schedule, with_attack, mesh)
+    gather = make_gather_step(pcfg, with_attack, mesh)
+
+    def train_step(state: ByzState, batch):
+        state = scatter(state, batch)
+        return jax.lax.cond(state.t % pcfg.T == 0, gather, lambda s: s, state)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving-side consolidation
+# ---------------------------------------------------------------------------
+
+
+def consolidate(params, pcfg: ProtocolConfig, chunk_bytes: int | None = None):
+    """Median-of-replicas -> single serving model (DMC applied once, full
+    delivery). The serving path is vanilla DP x TP decode (DESIGN.md §5)."""
+    cb = chunk_bytes or pcfg.chunk_bytes
+
+    def med(leaf):
+        def chunk_fn(c):
+            return jnp.median(c.astype(jnp.float32), axis=0).astype(c.dtype)
+        if (leaf.ndim >= 3 and leaf.shape[1] <= _STREAM_MAX_DIM1
+                and leaf.size * leaf.dtype.itemsize > cb):
+            L = leaf.shape[1]
+            def body(i, acc):
+                sl = jnp.squeeze(jax.lax.dynamic_slice_in_dim(leaf, i, 1, 1), 1)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    acc, chunk_fn(sl)[None], i, axis=0)
+            out0 = jax.eval_shape(chunk_fn,
+                                  jax.eval_shape(lambda l: jnp.squeeze(l[:, :1], 1), leaf))
+            init = jnp.zeros((L,) + out0.shape, out0.dtype)
+            return jax.lax.fori_loop(0, L, body, init)
+        return chunk_fn(leaf)
+
+    return jax.tree.map(med, params)

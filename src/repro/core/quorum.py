@@ -1,0 +1,80 @@
+"""Delivery-configuration sampling (asynchrony model).
+
+The paper's asynchronous network is abstracted by *which* q-of-n messages a
+receiver delivers each step (Assumption 7: every delivering configuration has
+probability >= rho > 0). We sample quorums with a seeded PRNG so runs are
+reproducible and every configuration has positive probability — exactly the
+distribution S the contraction proof (Lemma C.5) averages over.
+
+Masks double as the framework's **straggler-mitigation** policy at scale: a
+slow slice is simply outside the delivered quorum for that step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_quorum_mask(key: jax.Array, n: int, q: int,
+                       include: int | None = None) -> jax.Array:
+    """Bool [n] mask with exactly q True entries, optionally forcing ``include``.
+
+    Uniform over configurations -> satisfies Assumption 7 with rho = 1/C(n,q).
+    """
+    scores = jax.random.uniform(key, (n,))
+    if include is not None:
+        scores = scores.at[include].set(-1.0)  # always delivered (own state)
+    thresh = jnp.sort(scores)[q - 1]
+    return scores <= thresh
+
+
+def receiver_quorum_masks(key: jax.Array, n_recv: int, n_send: int, q: int,
+                          include_self: bool = False) -> jax.Array:
+    """[n_recv, n_send] bool; row r has exactly q True. include_self forces the
+    diagonal (a server always "delivers" its own parameter vector)."""
+    keys = jax.random.split(key, n_recv)
+    if include_self:
+        return jax.vmap(lambda k, i: sample_quorum_mask(k, n_send, q, include=i))(
+            keys, jnp.arange(n_recv))
+    return jax.vmap(lambda k: sample_quorum_mask(k, n_send, q))(keys)
+
+
+def sample_quorum_indices(key: jax.Array, n: int, q: int,
+                          include: int | None = None) -> jax.Array:
+    """Int [q] delivered indices (uniform subset), optionally forcing ``include``."""
+    scores = jax.random.uniform(key, (n,))
+    if include is not None:
+        scores = scores.at[include].set(-1.0)
+    return jnp.argsort(scores)[:q]
+
+
+def receiver_quorum_indices(key: jax.Array, n_recv: int, n_send: int, q: int,
+                            include_self: bool = False) -> jax.Array:
+    """[n_recv, q] delivered sender indices per receiver."""
+    keys = jax.random.split(key, n_recv)
+    if include_self:
+        return jax.vmap(lambda k, i: sample_quorum_indices(k, n_send, q, include=i))(
+            keys, jnp.arange(n_recv))
+    return jax.vmap(lambda k: sample_quorum_indices(k, n_send, q))(keys)
+
+
+def full_quorum(n_recv: int, n_send: int) -> jax.Array:
+    """Synchronous full delivery (no asynchrony)."""
+    return jnp.ones((n_recv, n_send), bool)
+
+
+def validate_counts(n_w: int, f_w: int, n_ps: int, f_ps: int,
+                    q_w: int, q_ps: int, synchronous: bool = False) -> None:
+    """Paper's resilience preconditions (Table 1 + §5)."""
+    if synchronous:
+        if n_w < 2 * f_w + 1:
+            raise ValueError(f"sync ByzSGD needs n_w >= 2f_w+1 ({n_w} < {2*f_w+1})")
+    else:
+        if n_w < 3 * f_w + 1:
+            raise ValueError(f"async ByzSGD needs n_w >= 3f_w+1 ({n_w} < {3*f_w+1})")
+    if n_ps < 3 * f_ps + 2:
+        raise ValueError(f"ByzSGD needs n_ps >= 3f_ps+2 ({n_ps} < {3*f_ps+2})")
+    if not (2 * f_w + 1 <= q_w <= n_w - f_w):
+        raise ValueError(f"need 2f_w+1 <= q_w <= n_w-f_w, got q_w={q_w}")
+    if not (2 * f_ps + 2 <= q_ps <= n_ps - f_ps):
+        raise ValueError(f"need 2f_ps+2 <= q_ps <= n_ps-f_ps, got q_ps={q_ps}")

@@ -1,0 +1,347 @@
+"""Single-host ByzSGD simulator — the *faithful reproduction* of the paper.
+
+Simulates n_ps parameter servers and n_w workers (both with Byzantine members)
+on one host by carrying server replicas / worker states as stacked leading axes
+and vmapping the model. Protocol semantics (quorums, GARs, scatter/gather
+schedule, filters, attacks) are exact; the network is replaced by the delivery
+distribution of Assumption 7 (see quorum.py).
+
+This module powers the paper-claim validation experiments in benchmarks/ and
+is the correctness oracle for the distributed shard_map protocol.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gars
+from .attacks import ByzantineSpec, inject_gradients, inject_models
+from .filters import (LipschitzHistory, lipschitz_coefficient, lipschitz_pass,
+                      outliers_bound, outliers_pass)
+from .quorum import receiver_quorum_indices, validate_counts
+
+
+@dataclass(frozen=True)
+class ByzSGDConfig:
+    n_workers: int = 9
+    f_workers: int = 2          # declared bound
+    n_servers: int = 5
+    f_servers: int = 1          # declared bound
+    q_workers: int | None = None   # gradients a server waits for (async)
+    q_servers: int | None = None   # models a node waits for (async)
+    T: int = 10                 # scatter length (gather every T steps)
+    gar: str = "mda"            # worker-gradient GAR at servers
+    variant: str = "async"      # "async" | "sync"
+    mda_exact_limit: int = 200_000
+    lip_horizon: int = 128
+    byz: ByzantineSpec = field(default_factory=ByzantineSpec)
+
+    def __post_init__(self):
+        qw = self.q_workers or (self.n_workers - self.f_workers)
+        qs = self.q_servers or max(self.n_servers - self.f_servers,
+                                   2 * self.f_servers + 2)
+        object.__setattr__(self, "q_workers", qw)
+        object.__setattr__(self, "q_servers", qs)
+        validate_counts(self.n_workers, self.f_workers, self.n_servers,
+                        self.f_servers, qw, qs,
+                        synchronous=(self.variant == "sync"))
+
+    @property
+    def h_servers(self) -> int:
+        return self.n_servers - self.byz.n_byz_servers
+
+    @property
+    def h_workers(self) -> int:
+        return self.n_workers - self.byz.n_byz_workers
+
+
+class SimState(NamedTuple):
+    params: Any            # pytree, leaves [n_ps, ...] — one replica per server
+    t: jax.Array           # scalar int32
+    key: jax.Array
+    # --- sync-variant worker state (unused but carried in async for uniformity)
+    w_model: Any           # pytree, leaves [n_w, ...]
+    w_grad: Any            # pytree, leaves [n_w, ...]
+    w_r: jax.Array         # [n_w] round-robin offsets
+    lip: LipschitzHistory  # buf [n_w, H]
+    anchor_eta: jax.Array    # eta at last gather (Outliers filter anchor)
+    anchor_gnorm: jax.Array  # ||g|| at last gather
+
+
+def _tree_stack_n(tree, n):
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), tree)
+
+
+def _tree_take(tree, idx):
+    return jax.tree.map(lambda l: l[idx], tree)
+
+
+def tree_sub_scaled(a, b, s):
+    return jax.tree.map(lambda x, y: (x - s * y).astype(x.dtype), a, b)
+
+
+def tree_gnorm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in jax.tree.leaves(tree)))
+
+
+def coordinatewise_diameter_sum(params, h_servers: int) -> jax.Array:
+    """Delta_t of Lemma 4.2: sum over coordinates of the max-min spread across
+    *honest* server replicas."""
+    tot = jnp.float32(0.0)
+    for l in jax.tree.leaves(params):
+        hl = l[:h_servers].astype(jnp.float32)
+        tot += jnp.sum(jnp.max(hl, axis=0) - jnp.min(hl, axis=0))
+    return tot
+
+
+def l2_diameter(params, h_servers: int) -> jax.Array:
+    """Max pairwise L2 distance between honest replicas."""
+    n = h_servers
+    flat = [l[:n].reshape(n, -1).astype(jnp.float32) for l in jax.tree.leaves(params)]
+    x = jnp.concatenate(flat, axis=1)
+    return jnp.sqrt(jnp.max(gars.pairwise_sqdists(x)))
+
+
+class ByzSGDSimulator:
+    """init_fn(key) -> params; loss_fn(params, batch) -> scalar."""
+
+    def __init__(self, cfg: ByzSGDConfig, init_fn: Callable, loss_fn: Callable,
+                 lr_schedule: Callable[[jax.Array], jax.Array]):
+        self.cfg = cfg
+        self.init_fn = init_fn
+        self.loss_fn = loss_fn
+        self.lr = lr_schedule
+        self.grad_fn = jax.grad(loss_fn)
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> SimState:
+        cfg = self.cfg
+        k_model, k_run = jax.random.split(key)
+        params0 = self.init_fn(k_model)  # same seed on all correct servers (§3.3)
+        return SimState(
+            params=_tree_stack_n(params0, cfg.n_servers),
+            t=jnp.zeros((), jnp.int32),
+            key=k_run,
+            w_model=_tree_stack_n(params0, cfg.n_workers),
+            w_grad=jax.tree.map(jnp.zeros_like,
+                                _tree_stack_n(params0, cfg.n_workers)),
+            w_r=jnp.arange(cfg.n_workers) % cfg.n_servers,
+            lip=LipschitzHistory(
+                jnp.full((cfg.n_workers, cfg.lip_horizon), jnp.nan, jnp.float32),
+                jnp.zeros((cfg.n_workers,), jnp.int32)),
+            anchor_eta=jnp.asarray(self.lr(0), jnp.float32),
+            anchor_gnorm=jnp.asarray(1.0, jnp.float32),
+        )
+
+    # -- async scatter step (Algorithms 1 & 2) ------------------------------
+    def scatter_step(self, state: SimState, batch) -> SimState:
+        """One asynchronous ByzSGD step. batch leaves: [n_w, per-worker, ...]."""
+        cfg = self.cfg
+        key, k_pull, k_matk, k_push, k_gatk = jax.random.split(state.key, 5)
+        eta = self.lr(state.t)
+
+        # 1. workers pull q_ps models, aggregate with Median ----------------
+        pull_idx = receiver_quorum_indices(k_pull, cfg.n_workers, cfg.n_servers,
+                                           cfg.q_servers)
+        models_seen = inject_models(  # Byzantine servers may equivocate
+            state.params, cfg.byz, k_matk,
+            n_receivers=cfg.n_workers if cfg.byz.equivocates_models else None)
+
+        def pull_one(widx, qidx):
+            if cfg.byz.equivocates_models:
+                seen = _tree_take(models_seen, widx)     # [n_ps, ...] for worker w
+            else:
+                seen = models_seen
+            sub = _tree_take(seen, qidx)                 # [q_ps, ...]
+            return gars.tree_gar(gars.coordinate_median, sub, cfg.f_servers)
+
+        pulled = jax.vmap(pull_one)(jnp.arange(cfg.n_workers), pull_idx)
+
+        # 2. workers compute gradients on their microbatch -------------------
+        grads = jax.vmap(self.grad_fn)(pulled, batch)     # [n_w, ...]
+
+        # 3. Byzantine workers replace their gradient ------------------------
+        grads_seen = inject_gradients(
+            grads, cfg.byz, k_gatk,
+            n_receivers=cfg.n_servers if cfg.byz.equivocates_grads else None)
+
+        # 4. servers aggregate q_w gradients with the GAR and update ---------
+        push_idx = receiver_quorum_indices(k_push, cfg.n_servers, cfg.n_workers,
+                                           cfg.q_workers)
+        rule = gars.GAR_REGISTRY[cfg.gar]
+
+        def server_update(sidx, qidx, p):
+            if cfg.byz.equivocates_grads:
+                seen = _tree_take(grads_seen, sidx)
+            else:
+                seen = grads_seen
+            sub = _tree_take(seen, qidx)                  # [q_w, ...]
+            if cfg.gar == "mda":
+                agg = gars.tree_gar(gars.mda, sub, cfg.f_workers,
+                                    exact_limit=cfg.mda_exact_limit)
+            else:
+                agg = gars.tree_gar(rule, sub, cfg.f_workers)
+            return tree_sub_scaled(p, agg, eta)
+
+        new_params = jax.vmap(server_update)(
+            jnp.arange(cfg.n_servers), push_idx, state.params)
+
+        gnorm = tree_gnorm(_tree_take(grads, 0))
+        anchor_eta = jnp.where(state.t % cfg.T == 0, eta, state.anchor_eta)
+        anchor_gnorm = jnp.where(state.t % cfg.T == 0, gnorm, state.anchor_gnorm)
+        return state._replace(params=new_params, t=state.t + 1, key=key,
+                              w_grad=jax.tree.map(
+                                  lambda a, b: b.astype(a.dtype), state.w_grad, grads),
+                              anchor_eta=anchor_eta, anchor_gnorm=anchor_gnorm)
+
+    # -- gather step (DMC, line 8-10 of Algorithm 2) -------------------------
+    def gather_step(self, state: SimState) -> SimState:
+        cfg = self.cfg
+        key, k_q, k_atk = jax.random.split(state.key, 3)
+        gather_idx = receiver_quorum_indices(k_q, cfg.n_servers, cfg.n_servers,
+                                             cfg.q_servers, include_self=True)
+        models_seen = inject_models(
+            state.params, cfg.byz, k_atk,
+            n_receivers=cfg.n_servers if cfg.byz.equivocates_models else None)
+
+        def dmc_one(sidx, qidx):
+            if cfg.byz.equivocates_models:
+                seen = _tree_take(models_seen, sidx)
+            else:
+                seen = models_seen
+            sub = _tree_take(seen, qidx)
+            return gars.tree_gar(gars.coordinate_median, sub, cfg.f_servers)
+
+        new_params = jax.vmap(dmc_one)(jnp.arange(cfg.n_servers), gather_idx)
+        return state._replace(params=new_params, key=key)
+
+    # -- sync-variant worker step (Algorithm 3) ------------------------------
+    def sync_step(self, state: SimState, batch):
+        """Synchronous variant: servers update as usual; each worker pulls ONE
+        model (round-robin) and validates with Lipschitz + Outliers filters.
+        Returns (new_state, diagnostics) with per-worker reject counts."""
+        cfg = self.cfg
+        key, k_matk, k_gatk = jax.random.split(state.key, 3)
+        eta = self.lr(state.t)
+
+        # servers update from *current worker* gradients (full delivery - sync)
+        grads_seen = inject_gradients(
+            state.w_grad, cfg.byz, k_gatk,
+            n_receivers=cfg.n_servers if cfg.byz.equivocates_grads else None)
+        rule = gars.GAR_REGISTRY[cfg.gar]
+
+        def server_update(sidx, p):
+            seen = (_tree_take(grads_seen, sidx)
+                    if cfg.byz.equivocates_grads else grads_seen)
+            if cfg.gar == "mda":
+                agg = gars.tree_gar(gars.mda, seen, cfg.f_workers,
+                                    exact_limit=cfg.mda_exact_limit)
+            else:
+                agg = gars.tree_gar(rule, seen, cfg.f_workers)
+            return tree_sub_scaled(p, agg, eta)
+
+        new_params = jax.vmap(server_update)(jnp.arange(cfg.n_servers), state.params)
+        models_seen = inject_models(
+            new_params, cfg.byz, k_matk,
+            n_receivers=cfg.n_workers if cfg.byz.equivocates_models else None)
+
+        # each worker: speculate local model, try servers in round-robin order,
+        # accept the first model passing BOTH filters.
+        def worker_step(w, model_w, grad_w, r_w, lip_w, batch_w):
+            local = tree_sub_scaled(model_w, grad_w, eta)
+
+            def candidate(off):
+                sid = (r_w + state.t + 1 + off) % cfg.n_servers
+                seen = (_tree_take(models_seen, w)
+                        if cfg.byz.equivocates_models else models_seen)
+                pulled = _tree_take(seen, sid)
+                g_new = self.grad_fn(pulled, batch_w)
+                k_coef = lipschitz_coefficient(g_new, grad_w, local, model_w)
+                ok_lip = lipschitz_pass(k_coef, lip_w, cfg.n_servers, cfg.f_servers)
+                bnd = outliers_bound(state.t, cfg.T, state.anchor_eta,
+                                     state.anchor_gnorm, cfg.n_workers,
+                                     cfg.f_workers)
+                ok_out = outliers_pass(pulled, local, bnd)
+                return pulled, g_new, k_coef, ok_lip & ok_out
+
+            pulled_all, g_all, k_all, ok_all = jax.vmap(candidate)(
+                jnp.arange(cfg.n_servers))
+            first = jnp.argmax(ok_all)  # first passing candidate (0 if none)
+            any_ok = jnp.any(ok_all)
+            pick = jnp.where(any_ok, first, 0)
+            new_model = jax.tree.map(
+                lambda c, m: jnp.where(any_ok, c[pick], m), pulled_all, local)
+            new_grad = jax.tree.map(
+                lambda c, g: jnp.where(any_ok, c[pick], g), g_all, grad_w)
+            # record the FIRST examined coefficient unconditionally: the paper
+            # keeps "all previous Lipschitz coefficients" — the (n-f)/n
+            # quantile is what absorbs the Byzantine fraction. Recording only
+            # accepted ks biases the cutoff down (rejection death-spiral).
+            new_lip = LipschitzHistory(
+                lip_w.buf.at[lip_w.idx % cfg.lip_horizon].set(k_all[0]),
+                lip_w.idx + 1)
+            rejects = jnp.where(any_ok, first, cfg.n_servers).astype(jnp.int32)
+            return new_model, new_grad, new_lip, rejects
+
+        new_wm, new_wg, new_lip, rejects = jax.vmap(worker_step)(
+            jnp.arange(cfg.n_workers), state.w_model, state.w_grad, state.w_r,
+            state.lip, batch)
+
+        gnorm = tree_gnorm(_tree_take(new_wg, 0))
+        anchor_eta = jnp.where(state.t % cfg.T == 0, eta, state.anchor_eta)
+        anchor_gnorm = jnp.where(state.t % cfg.T == 0, gnorm, state.anchor_gnorm)
+        new_state = state._replace(params=new_params, t=state.t + 1, key=key,
+                                   w_model=new_wm, w_grad=new_wg, lip=new_lip,
+                                   anchor_eta=anchor_eta,
+                                   anchor_gnorm=anchor_gnorm)
+        return new_state, {"rejects": rejects}
+
+    # -- sync gather: workers aggregate all servers with MeaMed --------------
+    def sync_gather_step(self, state: SimState) -> SimState:
+        cfg = self.cfg
+        state = self.gather_step(state)  # server-side DMC
+        key, k_atk = jax.random.split(state.key)
+        models_seen = inject_models(
+            state.params, cfg.byz, k_atk,
+            n_receivers=cfg.n_workers if cfg.byz.equivocates_models else None)
+
+        def refresh(w):
+            seen = (_tree_take(models_seen, w)
+                    if cfg.byz.equivocates_models else models_seen)
+            return gars.tree_gar(gars.meamed, seen, cfg.f_servers)
+
+        new_wm = jax.vmap(refresh)(jnp.arange(cfg.n_workers))
+        return state._replace(w_model=new_wm, key=key)
+
+    # -- full training loop ---------------------------------------------------
+    def run(self, state: SimState, batches, *, jit: bool = True,
+            metrics_fn: Callable | None = None, metrics_every: int = 10):
+        """batches: iterable of [n_w, ...] sharded batches. Returns final state
+        and a list of metric dicts."""
+        cfg = self.cfg
+        scatter = jax.jit(self.scatter_step) if jit else self.scatter_step
+        gather = jax.jit(self.gather_step) if jit else self.gather_step
+        sync = jax.jit(self.sync_step) if jit else self.sync_step
+        sync_gather = jax.jit(self.sync_gather_step) if jit else self.sync_gather_step
+        logs = []
+        for i, batch in enumerate(batches):
+            if cfg.variant == "sync":
+                if i > 0 and i % cfg.T == 0:
+                    state = sync_gather(state)
+                state, diag = sync(state, batch)
+            else:
+                state = scatter(state, batch)
+                diag = {}
+                if (i + 1) % cfg.T == 0:
+                    state = gather(state)
+            if metrics_fn is not None and i % metrics_every == 0:
+                m = dict(metrics_fn(state))
+                m["step"] = i
+                if "rejects" in diag:
+                    m["rejects"] = int(jnp.sum(diag["rejects"]))
+                logs.append(m)
+        return state, logs

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: coordinate-wise median over a small replica stack.
+
+The DMC gather phase and every worker model-pull apply a coordinate-wise
+median over n <= 64 parameter/model vectors of dimension d (up to 1e11 here) —
+a pure memory-bound streaming op (paper complexity O(n_ps * d)). The kernel
+streams [n, block_d] VMEM tiles and sorts the n-axis with a static bitonic
+sorting network built from jnp.minimum/maximum (vector ops only; no
+data-dependent control flow, so it maps to the VPU with full lanes).
+
+n is padded to the next power of two with +inf rows; since pads sort last, the
+median of the n real rows is row (n-1)//2 and n//2 of the sorted tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bitonic_pairs(n_pow2: int):
+    """Static compare-exchange schedule of the bitonic sorting network."""
+    pairs = []
+    k = 2
+    while k <= n_pow2:
+        j = k // 2
+        while j >= 1:
+            stage = []
+            for i in range(n_pow2):
+                l = i ^ j
+                if l > i:
+                    ascending = (i & k) == 0
+                    stage.append((i, l) if ascending else (l, i))
+            pairs.append(stage)
+            j //= 2
+        k *= 2
+    return pairs
+
+
+def _median_kernel(x_ref, o_ref, *, n: int, n_pow2: int):
+    rows = [x_ref[i, :] for i in range(n_pow2)]  # each [block_d]
+    for stage in bitonic_pairs(n_pow2):
+        for (lo_i, hi_i) in stage:
+            a, b = rows[lo_i], rows[hi_i]
+            rows[lo_i] = jnp.minimum(a, b)
+            rows[hi_i] = jnp.maximum(a, b)
+    med = 0.5 * (rows[(n - 1) // 2] + rows[n // 2])
+    o_ref[0, :] = med
+
+
+def median_pallas_call(n: int, n_pow2: int, d_pad: int, block_d: int,
+                       interpret: bool = False):
+    from functools import partial
+    grid = (d_pad // block_d,)
+    return pl.pallas_call(
+        partial(_median_kernel, n=n, n_pow2=n_pow2),
+        grid=grid,
+        in_specs=[pl.BlockSpec((n_pow2, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+        interpret=interpret,
+    )

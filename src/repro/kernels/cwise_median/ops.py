@@ -1,0 +1,36 @@
+"""Jitted public wrapper around the coordinate-wise median Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import median_pallas_call
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cwise_median(x: jax.Array, *, block_d: int = 1024,
+                 interpret: bool | None = None) -> jax.Array:
+    """[n, d] -> [d] f32 coordinate-wise median (n <= 64)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x.shape
+    if n > 64:
+        raise ValueError("cwise_median kernel is sized for replica stacks n<=64")
+    n_pow2 = 1
+    while n_pow2 < n:
+        n_pow2 *= 2
+    block_d = min(block_d, -(-d // _LANE) * _LANE)
+    block_d = -(-block_d // _LANE) * _LANE
+    d_pad = -(-d // block_d) * block_d
+    xp = jnp.full((n_pow2, d_pad), jnp.inf, jnp.float32)
+    xp = xp.at[:n, :d].set(x.astype(jnp.float32))
+    out = median_pallas_call(n, n_pow2, d_pad, block_d, interpret)(xp)
+    return out[0, :d]

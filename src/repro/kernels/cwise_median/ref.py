@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the coordinate-wise median kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def cwise_median_ref(x: jax.Array) -> jax.Array:
+    return jnp.median(x.astype(jnp.float32), axis=0)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused flash attention (online softmax).
+
+§Perf motivation: the roofline memory term of every *_4k/32k cell is
+dominated by HLO-visible [S, S] score traffic — the pure-JAX blocked
+attention still materialises each [q_block, kv_block] score tile in HBM at
+the HLO level. This kernel keeps the running (m, l, acc) statistics in VMEM
+scratch across the kv-grid dimension, so scores never leave VMEM: HBM traffic
+drops from O(S^2) to O(S * hd) per head — the single biggest lever on the
+memory roofline term identified in EXPERIMENTS.md §Perf.
+
+Layout: grid = (batch*heads, n_q_blocks, n_kv_blocks), kv innermost; the
+output block index ignores the kv dim (revisited), and f32 scratch carries
+the softmax state. MXU alignment: q_block/kv_block multiples of 128 on the
+lane dim, hd padded to 128.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, sq: int, skv: int,
+                  q_block: int, kv_block: int, n_kv: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [qb, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [kb, hd]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [qb, kb]
+
+    qpos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (q_block, kv_block), 0)
+    kpos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 1)
+    mask = (kpos < skv) & (qpos < sq)
+    if causal:
+        off = skv - sq  # prefix length when kv longer than q
+        mask &= kpos <= (qpos + off)
+        if window > 0:
+            mask &= kpos > (qpos + off - window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]                                # [qb]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_pallas_call(bh: int, sq_pad: int, skv_pad: int, hd_pad: int, *,
+                      sq: int, skv: int, causal: bool, window: int,
+                      q_block: int, kv_block: int, scale: float, dtype,
+                      interpret: bool = False):
+    n_q = sq_pad // q_block
+    n_kv = skv_pad // kv_block
+    kern = partial(_flash_kernel, causal=causal, window=window, sq=sq,
+                   skv=skv, q_block=q_block, kv_block=kv_block, n_kv=n_kv,
+                   scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd_pad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, hd_pad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, hd_pad), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd_pad), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_pad, hd_pad), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )

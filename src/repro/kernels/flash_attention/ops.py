@@ -1,0 +1,63 @@
+"""Jitted public wrapper around the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import flash_pallas_call
+
+_LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, size, axis):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "kv_block",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    interpret: bool | None = None):
+    """Fused attention. q: [B, Sq, H, hd]; k, v: [B, Skv, kvH, hd] (GQA:
+    kv heads repeated into H). Returns [B, Sq, H, hd]."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, Sq, H, hd = q.shape
+    Skv, kvH = k.shape[1], k.shape[2]
+    rep = H // kvH
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / np.sqrt(hd)
+
+    q_block = min(q_block, max(Sq, 8))
+    kv_block = min(kv_block, max(Skv, 8))
+    sq_pad = -(-Sq // q_block) * q_block
+    skv_pad = -(-Skv // kv_block) * kv_block
+    hd_pad = -(-hd // _LANE) * _LANE
+
+    def to_bh(x, s_pad):
+        x = jnp.moveaxis(x, 2, 1).reshape(B * H, x.shape[1], hd)
+        x = _pad_to(_pad_to(x, s_pad, 1), hd_pad, 2)
+        return x
+
+    qb = to_bh(q, sq_pad)
+    kb = to_bh(kr, skv_pad)
+    vb = to_bh(vr, skv_pad)
+    out = flash_pallas_call(
+        B * H, sq_pad, skv_pad, hd_pad, sq=Sq, skv=Skv, causal=causal,
+        window=window, q_block=q_block, kv_block=kv_block, scale=scale,
+        dtype=q.dtype, interpret=interpret)(qb, kb, vb)
+    out = out[:, :Sq, :hd].reshape(B, H, Sq, hd)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from repro.models.layers import _naive_attention
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q [B,S,H,hd]; k,v [B,S,kvH,hd] -> [B,S,H,hd]."""
+    return _naive_attention(q, k, v, causal=causal, window=window,
+                            cross=not causal)

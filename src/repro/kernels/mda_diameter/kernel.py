@@ -1,0 +1,38 @@
+"""Pallas TPU kernel: MDA subset-diameter scan.
+
+Exact MDA evaluates, for every size-(n-f) subset of the n inputs, the max
+pairwise distance inside the subset, then picks the argmin — C(n, f) masked
+max-reductions over the [n, n] distance matrix (paper complexity O(C(n_w,f_w))).
+The kernel tiles the static subset-mask table [S, n] over the grid and keeps
+the distance matrix resident in VMEM; each grid step reduces a [block_s, n, n]
+masked broadcast on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _diam_kernel(d2_ref, masks_ref, o_ref):
+    d2 = d2_ref[...]                      # [n, n] f32, VMEM-resident
+    m = masks_ref[...]                    # [block_s, n] f32 (1.0 / 0.0)
+    pair = m[:, :, None] * m[:, None, :]  # [block_s, n, n]
+    neg = jnp.float32(-3.4e38)
+    vals = jnp.where(pair > 0, d2[None], neg)
+    o_ref[0, :] = jnp.max(vals, axis=(1, 2))
+
+
+def diam_pallas_call(n_pad: int, s_pad: int, block_s: int, interpret: bool = False):
+    grid = (s_pad // block_s,)
+    return pl.pallas_call(
+        _diam_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_s, n_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, s_pad), jnp.float32),
+        interpret=interpret,
+    )

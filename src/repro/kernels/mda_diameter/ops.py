@@ -1,0 +1,48 @@
+"""Jitted wrapper: full Pallas MDA = Gram kernel + diameter-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...core import gars
+from ..pairwise_sqdist.ops import pairwise_sqdists
+from .kernel import diam_pallas_call
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def subset_diameters(d2: jax.Array, masks: jax.Array, *, block_s: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """[n,n] dists + [S,n] bool masks -> [S] subset diameters."""
+    if interpret is None:
+        interpret = _default_interpret()
+    s, n = masks.shape
+    n_pad = -(-n // _LANE) * _LANE
+    block_s = min(block_s, -(-s // _SUBLANE) * _SUBLANE)
+    block_s = -(-block_s // _SUBLANE) * _SUBLANE
+    s_pad = -(-s // block_s) * block_s
+    d2p = jnp.zeros((n_pad, n_pad), jnp.float32).at[:n, :n].set(d2)
+    mp = jnp.zeros((s_pad, n_pad), jnp.float32).at[:s, :n].set(
+        masks.astype(jnp.float32))
+    out = diam_pallas_call(n_pad, s_pad, block_s, interpret)(d2p, mp)
+    return out[0, :s]
+
+
+def mda(x: jax.Array, f: int, *, interpret: bool | None = None) -> jax.Array:
+    """Full MDA via the Pallas kernels: [n,d] -> [d]."""
+    n = x.shape[0]
+    if f == 0:
+        return jnp.mean(x, axis=0)
+    d2 = pairwise_sqdists(x, interpret=interpret)
+    masks = jnp.asarray(gars.subset_masks(n, f))
+    diam = subset_diameters(d2, masks, interpret=interpret)
+    sel = masks[jnp.argmin(diam)]
+    return (sel.astype(jnp.float32) @ x.astype(jnp.float32)) / (n - f)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the MDA subset-diameter kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def subset_diameters_ref(d2: jax.Array, masks: jax.Array) -> jax.Array:
+    pair = masks[:, :, None] & masks[:, None, :]
+    return jnp.max(jnp.where(pair, d2[None], -jnp.inf), axis=(1, 2))

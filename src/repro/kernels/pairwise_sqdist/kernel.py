@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: Gram matrix / pairwise squared distances for MDA.
+
+MDA's subset selection needs the [n, n] pairwise-distance matrix of n gradient
+vectors of dimension d — an O(n^2 d) contraction that dominates the server-side
+aggregation cost for large d (paper §4 complexity: O(n_w^2 d)). On TPU we
+compute it as a d-tiled Gram accumulation X X^T feeding the MXU: each grid step
+loads an [n, block_d] tile into VMEM and accumulates the f32 [n, n] Gram in the
+output block, which stays resident in VMEM across the whole grid (revisiting
+BlockSpec). d2 is then recovered exactly as diag+diag'-2G (ops.py).
+
+TPU alignment: block_d is a multiple of 128 (lane width); n is padded to a
+multiple of 8 (sublane width) by ops.py. Zero padding changes neither Gram nor
+distances.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, o_ref):
+    step = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # [n_pad, block_d] VMEM tile
+    partial = jax.lax.dot_general(
+        x, x, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # MXU: [n_pad, n_pad]
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(step > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+def gram_pallas_call(n_pad: int, d_pad: int, block_d: int, dtype,
+                     interpret: bool = False):
+    """Build the pallas_call for an [n_pad, d_pad] input (both pre-padded)."""
+    grid = (d_pad // block_d,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n_pad, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )

@@ -1,0 +1,39 @@
+"""Jitted public wrapper around the Gram/pairwise-distance Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gram_pallas_call
+
+_LANE = 128   # TPU lane width
+_SUBLANE = 8  # TPU sublane width
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram(x: jax.Array, *, block_d: int = 512, interpret: bool | None = None) -> jax.Array:
+    """[n, d] -> [n, n] f32 Gram matrix (zero-padded to TPU tile alignment)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x.shape
+    n_pad = -(-n // _SUBLANE) * _SUBLANE
+    block_d = min(block_d, -(-d // _LANE) * _LANE)
+    block_d = -(-block_d // _LANE) * _LANE
+    d_pad = -(-d // block_d) * block_d
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x)
+    g = gram_pallas_call(n_pad, d_pad, block_d, x.dtype, interpret)(xp)
+    return g[:n, :n]
+
+
+def pairwise_sqdists(x: jax.Array, *, block_d: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """[n, d] -> [n, n] exact squared L2 distances via the Pallas Gram kernel."""
+    g = gram(x, block_d=block_d, interpret=interpret)
+    sq = jnp.diagonal(g)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)

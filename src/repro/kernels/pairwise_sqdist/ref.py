@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the pairwise_sqdist kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return x @ x.T
+
+
+def pairwise_sqdists_ref(x: jax.Array) -> jax.Array:
+    g = gram_ref(x)
+    sq = jnp.diagonal(g)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * g, 0.0)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  1. FULL-depth compile on the production mesh — proves the sharding config is
+     coherent and the program fits (memory_analysis).
+  2. Two shallow depth-probe compiles — exact per-layer cost extrapolation for
+     HLO FLOPs / bytes / collective traffic (XLA's cost_analysis does not
+     scale loop bodies by trip count; see hlo_analysis.py).
+Results are cached as JSON under results/dryrun/<mesh>/ and consumed by
+launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k \
+      --multi-pod --engine naive
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs.shapes import SHAPES, SHAPE_ORDER
+from ..models.registry import ARCH_IDS, get_bundle
+from . import hlo_analysis as H
+from .mesh import make_production_mesh
+from .steps import build_cell, build_gather_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+PROBE_DEPTHS = {
+    # (L1, L2): multiples of the hybrid segment for zamba2; pairs for whisper
+    "zamba2-1.2b": (6, 12),
+    "default": (2, 4),
+}
+
+
+def probe_depths(arch: str, full_layers: int):
+    l1, l2 = PROBE_DEPTHS.get(arch, PROBE_DEPTHS["default"])
+    if full_layers <= l2:
+        return None  # tiny model: full compile is exact enough
+    return l1, l2
+
+
+def lower_compile(cell, unroll: bool = False):
+    from repro.models import unroll_ctx
+    donate = {"train": (0,), "gather": (0,), "prefill": (2,), "decode": (1,)}[
+        cell.meta["kind"]]
+    with jax.set_mesh(cell.mesh):
+        with unroll_ctx.unrolled(unroll):
+            lowered = jax.jit(cell.fn, donate_argnums=donate).lower(*cell.in_specs)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def measure(cell, n_devices: int, unroll: bool = False):
+    t0 = time.time()
+    lowered, compiled = lower_compile(cell, unroll)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = H.collective_traffic(txt, n_devices)
+    return {
+        "compile_s": round(time.time() - t0, 1),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_per_device": coll.bytes_per_device,
+        "collective_counts": coll.counts,
+        "collective_bytes_by_kind": coll.bytes_by_kind,
+        "collective_bytes_by_group_size": coll.bytes_by_group_size,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, engine: str,
+             include_gather: bool, exchange_dtype: str = "float32",
+             pull: str = "median", probes: bool = True) -> dict:
+    cell_cfg = SHAPES[shape_name]
+    bundle = get_bundle(arch)
+    ok, why = bundle.supports_cell(shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    kw = dict(engine=engine, exchange_dtype=exchange_dtype, pull=pull) \
+        if cell_cfg.kind == "train" else {}
+
+    out = {"arch": arch, "shape": shape_name, "kind": cell_cfg.kind,
+           "mesh": "2x16x16" if multi_pod else "16x16", "engine": engine,
+           "n_devices": n_dev, "layers": bundle.cfg.n_layers}
+
+    # 1. full-depth compile (fit proof)
+    cell = build_cell(arch, cell_cfg, mesh, **kw)
+    out["full"] = measure(cell, n_dev)
+    if cell_cfg.kind == "train":
+        out["n_groups"] = cell.meta["G"]
+
+    # 2. depth probes for loop-corrected cost
+    pd = probe_depths(arch, bundle.cfg.n_layers)
+    if probes and pd is not None:
+        l1, l2 = pd
+        m1 = measure(build_cell(arch, cell_cfg, mesh, depth=l1, **kw), n_dev,
+                     unroll=True)
+        m2 = measure(build_cell(arch, cell_cfg, mesh, depth=l2, **kw), n_dev,
+                     unroll=True)
+        L = bundle.cfg.n_layers
+        out["probes"] = {"depths": [l1, l2], "m1": m1, "m2": m2}
+        out["extrapolated"] = {
+            k: H.extrapolate(m1[k], m2[k], l1, l2, L)
+            for k in ("flops", "bytes_accessed", "collective_bytes_per_device")}
+    else:
+        out["extrapolated"] = {
+            k: out["full"][k]
+            for k in ("flops", "bytes_accessed", "collective_bytes_per_device")}
+
+    # 3. DMC gather step (train cells only; amortised 1/T)
+    if cell_cfg.kind == "train" and include_gather:
+        gcell = build_gather_cell(arch, cell_cfg, mesh, engine=engine)
+        out["gather"] = measure(gcell, n_dev)
+    return out
+
+
+def result_path(arch, shape, multi_pod, engine, tag=""):
+    d = os.path.join(RESULTS_DIR, "2x16x16" if multi_pod else "16x16")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}__{engine}{tag}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--engine", default="naive", choices=["naive", "sharded"])
+    ap.add_argument("--exchange-dtype", default="float32")
+    ap.add_argument("--pull", default="median", choices=["median", "roundrobin"])
+    ap.add_argument("--gather", action="store_true", default=True)
+    ap.add_argument("--no-gather", dest="gather", action="store_false")
+    ap.add_argument("--no-probes", dest="probes", action="store_false")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = SHAPE_ORDER if args.shape == "all" else args.shape.split(",")
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            tag = ""
+            if args.pull != "median":
+                tag += f"__{args.pull}"
+            if args.exchange_dtype != "float32":
+                tag += f"__{args.exchange_dtype}"
+            path = result_path(arch, shape, args.multi_pod, args.engine, tag)
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {arch} x {shape}")
+                n_ok += 1
+                continue
+            t0 = time.time()
+            try:
+                res = run_cell(arch, shape, multi_pod=args.multi_pod,
+                               engine=args.engine,
+                               include_gather=args.gather,
+                               exchange_dtype=args.exchange_dtype,
+                               pull=args.pull, probes=args.probes)
+            except Exception as e:  # noqa: BLE001 - report and continue
+                res = {"arch": arch, "shape": shape, "error": str(e),
+                       "traceback": traceback.format_exc()}
+                n_fail += 1
+                print(f"[FAIL]   {arch} x {shape}: {e}")
+                with open(path + ".err", "w") as f:
+                    json.dump(res, f, indent=1)
+                continue
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if "skipped" in res:
+                n_skip += 1
+                print(f"[skip]   {arch} x {shape}: {res['skipped']}")
+            else:
+                n_ok += 1
+                mem = res["full"]["memory"]
+                per_dev = (mem["argument_bytes"] + mem["temp_bytes"]
+                           + mem["output_bytes"] - mem["alias_bytes"])
+                print(f"[ok]     {arch} x {shape} ({res['mesh']}, "
+                      f"{args.engine}): flops={res['extrapolated']['flops']:.3e} "
+                      f"coll={res['extrapolated']['collective_bytes_per_device']:.3e}B "
+                      f"mem/dev={per_dev/2**30:.2f}GiB "
+                      f"({time.time()-t0:.0f}s)")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

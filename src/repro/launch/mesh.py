@@ -1,0 +1,57 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is the spec-mandated entry: single-pod 16x16
+('data','model') or multi-pod 2x16x16 ('pod','data','model'). It is a FUNCTION
+(never a module-level constant) so importing this module never touches jax
+device state.
+
+``make_byz_mesh`` derives the ByzSGD training view over the *same* devices:
+('rep', 'fsdp', 'model') where 'rep' indexes the n_groups co-located
+worker/server groups (failure domains — DESIGN.md §Worker granularity) and
+'fsdp' the ZeRO-style intra-group shard. Groups are consecutive dp slices, so
+for n_groups >= n_pods every group nests inside one pod (DMC crosses pods,
+scatter-phase traffic stays intra-pod).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel slices R (pod x data)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes["data"]
+
+
+def model_size(mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+
+
+def make_byz_mesh(mesh, n_groups: int) -> Mesh:
+    """('rep', 'fsdp', 'model') view over the production mesh's devices."""
+    R, M = dp_size(mesh), model_size(mesh)
+    if R % n_groups:
+        raise ValueError(f"n_groups={n_groups} must divide dp slices R={R}")
+    K = R // n_groups
+    devs = mesh.devices.reshape(n_groups, K, M)
+    return Mesh(devs, ("rep", "fsdp", "model"), axis_types=_auto(3))
+
+
+def make_serve_mesh(mesh) -> Mesh:
+    """('data', 'model') flat view for serving (no replica axis)."""
+    R, M = dp_size(mesh), model_size(mesh)
+    return Mesh(mesh.devices.reshape(R, M), ("data", "model"),
+                axis_types=_auto(2))

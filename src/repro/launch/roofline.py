@@ -1,0 +1,179 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. cost_analysis() values are PER-DEVICE (verified
+empirically), so:
+
+    compute term    = HLO_FLOPs_per_device / 197e12              [s]
+    memory term     = HLO_bytes_per_device / 819e9               [s]
+    collective term = ring-model collective bytes per device / 50e9 [s]
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step across the whole
+job; the ratio MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/dispatch/
+protocol overhead. DMC gather terms are amortised by 1/T.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from ..configs.shapes import SHAPES
+from ..models.registry import ARCH_IDS, get_bundle
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def param_counts(arch: str) -> tuple[float, float]:
+    """(total params N, active params N_active)."""
+    import jax
+    bundle = get_bundle(arch)
+    shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    total = sum(l.size for l in jax.tree.leaves(shapes))
+    cfg = bundle.cfg
+    if cfg.n_experts:
+        # active = total - (unused experts' share of MoE weights)
+        E, K = cfg.n_experts, cfg.top_k
+        moe = cfg.n_layers * E * 3 * cfg.d_model * cfg.d_ff
+        active = total - moe * (1 - K / E)
+        return float(total), float(active)
+    return float(total), float(total)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N_active*tokens for train; 2*N_active*tokens for prefill/decode."""
+    cell = SHAPES[shape_name]
+    _, n_active = param_counts(arch)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if arch == "whisper-small":  # enc S/2 + dec S/2 tokens
+            tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def load_cell(arch: str, shape: str, mesh: str = "16x16",
+              engine: str = "naive") -> dict | None:
+    p = os.path.join(RESULTS_DIR, mesh, f"{arch}__{shape}__{engine}.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "16x16",
+                 engine: str = "naive") -> dict | None:
+    res = load_cell(arch, shape, mesh, engine)
+    if res is None or "skipped" in res or "error" in res:
+        return {"arch": arch, "shape": shape,
+                "skipped": res.get("skipped") if res else "missing"}
+    ex = res["extrapolated"]
+    chips = res["n_devices"]
+    t_comp = ex["flops"] / PEAK_FLOPS
+    t_mem = ex["bytes_accessed"] / HBM_BW
+    t_coll = ex["collective_bytes_per_device"] / LINK_BW
+    # amortised DMC gather
+    g = res.get("gather")
+    T = 50
+    if g:
+        t_comp += g["flops"] / PEAK_FLOPS / T
+        t_mem += g["bytes_accessed"] / HBM_BW / T
+        t_coll += g["collective_bytes_per_device"] / LINK_BW / T
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(arch, shape)
+    hlo_total = ex["flops"] * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful model flops per second at the bound, vs peak
+    step_time = bound
+    mfu = mf / (step_time * chips * PEAK_FLOPS) if step_time > 0 else 0.0
+    mem = res["full"]["memory"]
+    per_dev_gib = (mem["argument_bytes"] + mem["temp_bytes"]
+                   + mem["output_bytes"] - mem["alias_bytes"]) / 2**30
+    lever = _lever(arch, res["kind"], dom)
+    return {"arch": arch, "shape": shape, "mesh": mesh, "engine": engine,
+            "lever": lever,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "est_step_s": step_time, "model_flops": mf,
+            "useful_flops_ratio": useful, "roofline_fraction": mfu,
+            "mem_per_dev_gib": per_dev_gib,
+            "n_groups": res.get("n_groups")}
+
+
+def _lever(arch: str, kind: str, dominant: str) -> str:
+    """One sentence per cell: what would move the dominant term down."""
+    cfg = get_bundle(arch).cfg
+    if dominant == "collective":
+        if kind == "train" and cfg.n_experts:
+            return ("true all-to-all EP dispatch: the TP-in-expert down-proj "
+                    "psum carries the 1.25*K capacity expansion (est 2-3x)")
+        if kind == "train":
+            return ("~19% is protocol traffic (sync round-robin pull cuts it "
+                    "34%); the rest is TP activation traffic — COL-qkv once "
+                    "the Shardy partitioner lands (est -40%)")
+        return ("flash-decode already shards the cache; batch the requests "
+                "deeper per chip or shrink TP for serve meshes")
+    if dominant == "memory":
+        if kind in ("train", "prefill") and not cfg.subquadratic:
+            return ("fused Pallas flash attention keeps the S^2 scores in "
+                    "VMEM (kernels/flash_attention, wired on TPU backend)")
+        if kind == "decode":
+            return ("int8 KV-cache quantisation halves cache streaming; "
+                    "decode is cache-bandwidth-bound by nature")
+        return ("larger per-chip microbatch amortises parameter streaming "
+                "(state-based decode already has O(1) state)")
+    return ("raise per-chip arithmetic intensity: bigger microbatch, less "
+            "remat recompute (useful-flops ratio shows the headroom)")
+
+
+def full_table(mesh: str = "16x16", engine: str = "naive"):
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rows.append(roofline_row(arch, shape, mesh, engine))
+    return [r for r in rows if r]
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dominant':>10s} {'MFU':>6s} {'useful':>7s} "
+           f"{'GiB/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} SKIP: {r['skipped']}")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+            f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+            f"{r['dominant']:>10s} {r['roofline_fraction']:6.1%} "
+            f"{r['useful_flops_ratio']:7.2f} {r['mem_per_dev_gib']:8.2f}")
+        lines.append(f"{'':37s} -> {r['lever']}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--engine", default="naive")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = full_table(args.mesh, args.engine)
+    print(format_table(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

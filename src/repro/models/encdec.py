@@ -1,0 +1,237 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, D] (what Whisper's 2x-strided conv
+stack would emit). Sinusoidal positions on the encoder, learned positions on
+the decoder, pre-LN, GELU MLPs, MHA (kv = heads), tied decoder embedding.
+
+Serving: prefill builds the decoder self-attn cache AND per-layer cross-attn
+K/V (computed once from the encoder output); decode_step then runs pure
+decoder steps (flash-decode on self-attn, fixed cross K/V).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .unroll_ctx import scan as uscan
+from .config import ArchConfig
+from .sharding import shard
+
+
+def sinusoids(length: int, d: int) -> jax.Array:
+    lt = np.log(10000.0) / (d // 2 - 1)
+    inv = np.exp(-lt * np.arange(d // 2))
+    ang = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1),
+                       jnp.float32)
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln_attn": L.init_layernorm(cfg.d_model),
+            "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_heads,
+                                     cfg.hd),
+            "ln_mlp": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln_self": L.init_layernorm(cfg.d_model),
+            "self_attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                          cfg.n_heads, cfg.hd),
+            "ln_cross": L.init_layernorm(cfg.d_model),
+            "cross_attn": L.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                           cfg.n_heads, cfg.hd),
+            "ln_mlp": L.init_layernorm(cfg.d_model),
+            "mlp": L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff)}
+
+
+def init(key, cfg: ArchConfig):
+    ke, kE, kD, kp = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_block(k, cfg))(
+        jax.random.split(kE, cfg.encoder_layers))
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg))(
+        jax.random.split(kD, cfg.n_layers))
+    max_dec = 65536  # learned positional table (decode positions up to 64k)
+    return {"embed": L.init_embedding(ke, cfg.vocab, cfg.d_model),
+            "pos_dec": (0.01 * jax.random.normal(kp, (max_dec, cfg.d_model))
+                        ).astype(jnp.float32),
+            "enc_blocks": enc, "dec_blocks": dec,
+            "ln_enc": L.init_layernorm(cfg.d_model),
+            "ln_f": L.init_layernorm(cfg.d_model)}
+
+
+def encode(params, frames, *, cfg: ArchConfig, remat: bool = True):
+    """frames: [B, S_enc, D] stub embeddings -> [B, S_enc, D]."""
+    dtype = jnp.dtype(cfg.act_dtype)
+    S = frames.shape[1]
+    x = (frames.astype(dtype) + sinusoids(S, cfg.d_model).astype(dtype))
+    x = shard(x, "act_btd")
+
+    def body(blk, x):
+        h = L.layernorm(blk["ln_attn"], x, cfg.norm_eps)
+        q, k, v = L.attention_qkv(blk["attn"], h, cfg.n_heads, cfg.n_heads,
+                                  cfg.hd, None, cfg.rope_theta, dtype=dtype)
+        attn = L.blocked_attention(q, k, v, causal=False, cross=True,
+                                   q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + shard(L.attention_out(blk["attn"], attn, dtype), "act_btd")
+        h = L.layernorm(blk["ln_mlp"], x, cfg.norm_eps)
+        return x + shard(L.gelu_mlp(blk["mlp"], h, dtype), "act_btd")
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def sb(x, blk):
+        return body(blk, x), None
+
+    x, _ = uscan(sb, x, params["enc_blocks"])
+    return L.layernorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _dec_block_train(blk, x, enc_out, cfg: ArchConfig, dtype):
+    h = L.layernorm(blk["ln_self"], x, cfg.norm_eps)
+    q, k, v = L.attention_qkv(blk["self_attn"], h, cfg.n_heads, cfg.n_heads,
+                              cfg.hd, None, cfg.rope_theta, dtype=dtype)
+    attn = L.blocked_attention(q, k, v, causal=True, q_block=cfg.q_block,
+                               kv_block=cfg.kv_block)
+    x = x + shard(L.attention_out(blk["self_attn"], attn, dtype), "act_btd")
+    h = L.layernorm(blk["ln_cross"], x, cfg.norm_eps)
+    qc, _, _ = L.attention_qkv(blk["cross_attn"], h, cfg.n_heads, cfg.n_heads,
+                               cfg.hd, None, cfg.rope_theta, dtype=dtype)
+    B, Se, D = enc_out.shape
+    kc = (enc_out @ blk["cross_attn"]["wk"].astype(dtype)).reshape(
+        B, Se, cfg.n_heads, cfg.hd)
+    vc = (enc_out @ blk["cross_attn"]["wv"].astype(dtype)).reshape(
+        B, Se, cfg.n_heads, cfg.hd)
+    cattn = L.blocked_attention(qc, kc, vc, causal=False, cross=True,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block)
+    x = x + shard(L.attention_out(blk["cross_attn"], cattn, dtype), "act_btd")
+    h = L.layernorm(blk["ln_mlp"], x, cfg.norm_eps)
+    return x + shard(L.gelu_mlp(blk["mlp"], h, dtype), "act_btd")
+
+
+def decode_train(params, tokens, enc_out, *, cfg: ArchConfig,
+                 remat: bool = True):
+    dtype = jnp.dtype(cfg.act_dtype)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], 0, S).astype(dtype)
+    x = shard(x, "act_btd")
+    from functools import partial
+    body = partial(_dec_block_train, enc_out=enc_out, cfg=cfg, dtype=dtype)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def sb(x, blk):
+        return body(blk, x), None
+
+    x, _ = uscan(sb, x, params["dec_blocks"])
+    return L.layernorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss(params, batch, *, cfg: ArchConfig):
+    enc_out = encode(params, batch["enc_frames"], cfg=cfg)
+    hidden = decode_train(params, batch["tokens"], enc_out, cfg=cfg)
+    return L.cross_entropy_chunked(hidden, params["embed"], batch["labels"])
+
+
+# -- serving ------------------------------------------------------------------
+
+class EncDecCaches(NamedTuple):
+    self_kv: L.KVCache      # leaves [L, ...]
+    cross_k: jax.Array      # [L, B, Se, H, hd]
+    cross_v: jax.Array
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, n_chunks: int,
+                dtype=jnp.bfloat16) -> EncDecCaches:
+    Ld = cfg.n_layers
+    kv = jax.vmap(lambda _: L.KVCache.create(batch, cfg.n_heads, max_len,
+                                             cfg.hd, n_chunks, dtype))(
+        jnp.arange(Ld))
+    Se = cfg.max_source_len
+    z = jnp.zeros((Ld, batch, Se, cfg.n_heads, cfg.hd), dtype)
+    return EncDecCaches(kv, z, z)
+
+
+def prefill(params, batch, caches: EncDecCaches, *, cfg: ArchConfig):
+    """Encodes frames, precomputes cross K/V, prefills decoder self-attn with
+    ``batch['tokens']``. Returns (last logits, caches)."""
+    dtype = jnp.dtype(cfg.act_dtype)
+    enc_out = encode(params, batch["enc_frames"], cfg=cfg, remat=False)
+    B, Se, D = enc_out.shape
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = L.embed(params["embed"], tokens, dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], 0, S).astype(dtype)
+    x = shard(x, "act_btd")
+
+    def sb(x, blk_cache):
+        blk, kvcache = blk_cache
+        h = L.layernorm(blk["ln_self"], x, cfg.norm_eps)
+        q, k, v = L.attention_qkv(blk["self_attn"], h, cfg.n_heads, cfg.n_heads,
+                                  cfg.hd, None, cfg.rope_theta, dtype=dtype)
+        kvcache = L.cache_prefill(kvcache, k, v)
+        attn = L.blocked_attention(q, k, v, causal=True, q_block=cfg.q_block,
+                                   kv_block=cfg.kv_block)
+        x = x + L.attention_out(blk["self_attn"], attn, dtype)
+        h = L.layernorm(blk["ln_cross"], x, cfg.norm_eps)
+        qc, _, _ = L.attention_qkv(blk["cross_attn"], h, cfg.n_heads,
+                                   cfg.n_heads, cfg.hd, None, cfg.rope_theta,
+                                   dtype=dtype)
+        kc = (enc_out @ blk["cross_attn"]["wk"].astype(dtype)).reshape(
+            B, Se, cfg.n_heads, cfg.hd)
+        vc = (enc_out @ blk["cross_attn"]["wv"].astype(dtype)).reshape(
+            B, Se, cfg.n_heads, cfg.hd)
+        cattn = L.blocked_attention(qc, kc, vc, causal=False, cross=True,
+                                    q_block=cfg.q_block, kv_block=cfg.kv_block)
+        x = x + L.attention_out(blk["cross_attn"], cattn, dtype)
+        h = L.layernorm(blk["ln_mlp"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(blk["mlp"], h, dtype)
+        return x, (kvcache, kc.astype(dtype), vc.astype(dtype))
+
+    x, (kv, ck, cv) = uscan(sb, x, (params["dec_blocks"], caches.self_kv))
+    hidden = L.layernorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    lg = L.unembed(params["embed"], hidden)
+    return lg[:, 0], EncDecCaches(kv, ck, cv)
+
+
+def decode_step(params, caches: EncDecCaches, batch, *, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.act_dtype)
+    tok = batch["token"]
+    B = tok.shape[0]
+    pos = caches.self_kv.length[0]
+    x = L.embed(params["embed"], tok, dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1).astype(dtype)
+
+    def sb(x, blk_cache):
+        blk, kvcache, kc, vc = blk_cache
+        h = L.layernorm(blk["ln_self"], x, cfg.norm_eps)
+        q, k, v = L.attention_qkv(blk["self_attn"], h, cfg.n_heads, cfg.n_heads,
+                                  cfg.hd, None, cfg.rope_theta, dtype=dtype)
+        kvcache = L.cache_insert(kvcache, k, v)
+        attn = L.flash_decode(q, kvcache)
+        x = x + L.attention_out(blk["self_attn"], attn, dtype)
+        h = L.layernorm(blk["ln_cross"], x, cfg.norm_eps)
+        qc, _, _ = L.attention_qkv(blk["cross_attn"], h, cfg.n_heads,
+                                   cfg.n_heads, cfg.hd, None, cfg.rope_theta,
+                                   dtype=dtype)
+        cattn = L.blocked_attention(qc, kc, vc, causal=False, cross=True,
+                                    q_block=1, kv_block=cfg.kv_block)
+        x = x + L.attention_out(blk["cross_attn"], cattn, dtype)
+        h = L.layernorm(blk["ln_mlp"], x, cfg.norm_eps)
+        x = x + L.gelu_mlp(blk["mlp"], h, dtype)
+        return x, kvcache
+
+    x, kv = uscan(
+        sb, x, (params["dec_blocks"], caches.self_kv, caches.cross_k,
+                caches.cross_v))
+    hidden = L.layernorm(params["ln_f"], x, cfg.norm_eps)
+    lg = L.unembed(params["embed"], hidden)
+    return lg[:, 0], EncDecCaches(kv, caches.cross_k, caches.cross_v)

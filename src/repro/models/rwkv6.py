@@ -1,0 +1,257 @@
+"""RWKV6 ("Finch") — attention-free RNN with data-dependent per-channel decay.
+
+Per head (K = V = head dim):
+    y_t = r_t . (S_{t-1} + diag(u * k_t) v_t),   S_t = diag(d_t) S_{t-1} + k_t (x) v_t
+with d_t = exp(-exp(w_t)) and w_t = w0 + tanh(x_t A_w) B_w — the paper-defining
+*data-dependent decay* (arXiv:2404.05892). Training uses a chunked scan: the
+intra-chunk pairwise decay tensor is computed exactly in log-space
+(exp(L_{t-1}-L_j) <= 1 for j < t, so no overflow), chunk=16 keeps the
+[B,H,C,C,K] transient at tens of MB. Decode is the O(1)-state recurrence =>
+long_500k serve_step is sub-quadratic.
+
+Simplification vs the reference implementation (documented): the five token-
+shift interpolation weights (mu_r/k/v/w/g) are static per-channel parameters
+(RWKV6 makes them data-dependent via a small LoRA as well); the decay LoRA —
+the architecturally defining piece — is implemented in full.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .unroll_ctx import scan as uscan
+from .config import ArchConfig
+from .sharding import shard
+
+LOG_DECAY_FLOOR = -20.0
+DECAY_LORA = 64
+
+
+class RwkvCache(NamedTuple):
+    shift_t: jax.Array   # [B, D] last token entering time-mix
+    shift_c: jax.Array   # [B, D] last token entering channel-mix
+    wkv: jax.Array       # [B, H, K, V] state
+
+
+def dims(cfg: ArchConfig):
+    K = cfg.ssm_head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def init_block(key, cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    H, K = dims(cfg)
+    ks = jax.random.split(key, 10)
+    mu = lambda k: jax.random.uniform(k, (D,), jnp.float32)
+    return {
+        "ln1": L.init_layernorm(D),
+        "ln2": L.init_layernorm(D),
+        "mu_r": mu(ks[0]), "mu_k": mu(ks[1]), "mu_v": mu(ks[2]),
+        "mu_w": mu(ks[3]), "mu_g": mu(ks[4]),
+        "Wr": L._init_dense(ks[5], D, D, D),
+        "Wk": L._init_dense(ks[6], D, D, D),
+        "Wv": L._init_dense(ks[7], D, D, D),
+        "Wg": L._init_dense(ks[8], D, D, D),
+        "w0": jnp.full((D,), 1.0, jnp.float32),   # exp(1) ~ strong decay init
+        "wA": L._init_dense(ks[9], D, D, DECAY_LORA),
+        "wB": jnp.zeros((DECAY_LORA, D), jnp.float32),
+        "u": (0.1 * jax.random.normal(jax.random.fold_in(key, 11), (H, K))).astype(jnp.float32),
+        "ln_x": L.init_layernorm(D),
+        "Wo": L._init_dense(jax.random.fold_in(key, 12), D, D, D),
+        # channel mix
+        "mu_ck": mu(jax.random.fold_in(key, 13)),
+        "mu_cr": mu(jax.random.fold_in(key, 14)),
+        "cWk": L._init_dense(jax.random.fold_in(key, 15), D, D, F),
+        "cWv": L._init_dense(jax.random.fold_in(key, 16), F, F, D),
+        "cWr": L._init_dense(jax.random.fold_in(key, 17), D, D, D),
+    }
+
+
+def _shift(x, last):
+    """Token shift: [B,S,D] -> previous token per position; last: [B,D]."""
+    return jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int = 16):
+    """r,k,v: [B,S,H,K]; lw: [B,S,H,K] log decays (<=0); u: [H,K];
+    s0: [B,H,K,V]. Returns (y [B,S,H,K], s_final)."""
+    Bsz, S, H, K = r.shape
+    nch = -(-S // chunk)
+    pad = nch * chunk - S
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, lw = (jnp.pad(a, z4) for a in (r, k, v, lw))
+    resh = lambda a: a.reshape(Bsz, nch, chunk, H, K).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)  # [nch,B,H,C,K]
+
+    mask_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strict j < t
+
+    def body(s, xs):
+        rr, kk, vv, ww = xs                      # [B,H,C,K]
+        Lc = jnp.cumsum(ww, axis=2)              # inclusive [B,H,C,K]
+        # inter: y_t += (r_t * exp(L_{t-1})) @ s ; L_{t-1} = L_t - w_t
+        q_t = rr * jnp.exp(Lc - ww)
+        y_inter = jnp.einsum("bhck,bhkv->bhcv", q_t, s)
+        # intra (j < t): A[t,j] = sum_k r_t k_j exp(L_{t-1}-L_j)  (exp arg <= 0)
+        Dk = (Lc - ww)[:, :, :, None, :] - Lc[:, :, None, :, :]  # [B,H,C,C,K]
+        Dk = jnp.where(mask_lt[None, None, :, :, None], Dk, -jnp.inf)
+        A = jnp.einsum("bhtk,bhjk,bhtjk->bhtj", rr, kk, jnp.exp(Dk))
+        y_intra = jnp.einsum("bhtj,bhjv->bhtv", A, vv)
+        # current-token bonus: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bhck,bhck->bhc", rr, u[None, :, None, :] * kk)
+        y_bonus = bonus[..., None] * vv
+        # state: s' = diag(exp(L_C)) s + sum_j diag(exp(L_C - L_j)) k_j (x) v_j
+        wtail = jnp.exp(Lc[:, :, -1:, :] - Lc)   # [B,H,C,K]
+        s_new = (jnp.exp(Lc[:, :, -1, :])[..., None] * s
+                 + jnp.einsum("bhjk,bhjv->bhkv", kk * wtail, vv))
+        return s_new, y_inter + y_intra + y_bonus
+
+    from .unroll_ctx import active as _unroll_active
+    if _unroll_active():
+        # COST-PROBE PATH (dry-run only): vmap the chunk bodies with a dummy
+        # state. Operation count per chunk is identical to the sequential
+        # scan; OUTPUT VALUES ARE WRONG (state not propagated). Never taken
+        # outside launch/dryrun.py probes.
+        _, ys = jax.vmap(body, in_axes=(None, 0))(
+            s0.astype(jnp.float32),
+            (rc.astype(jnp.float32), kc.astype(jnp.float32),
+             vc.astype(jnp.float32), lwc))
+        s_fin = s0.astype(jnp.float32)
+    else:
+        s_fin, ys = jax.lax.scan(body, s0.astype(jnp.float32),
+                                 (rc.astype(jnp.float32), kc.astype(jnp.float32),
+                                  vc.astype(jnp.float32), lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bsz, nch * chunk, H, K)
+    return y[:, :S], s_fin
+
+
+def time_mix(p, x, cfg: ArchConfig, dtype, cache: RwkvCache | None):
+    B, S, D = x.shape
+    H, K = dims(cfg)
+    last = cache.shift_t if cache is not None else jnp.zeros((B, D), x.dtype)
+    xp = _shift(x, last)
+    lerp = lambda mu: x + (xp - x) * mu.astype(dtype)
+    r = (lerp(p["mu_r"]) @ p["Wr"].astype(dtype)).reshape(B, S, H, K)
+    k = (lerp(p["mu_k"]) @ p["Wk"].astype(dtype)).reshape(B, S, H, K)
+    v = (lerp(p["mu_v"]) @ p["Wv"].astype(dtype)).reshape(B, S, H, K)
+    g = lerp(p["mu_g"]) @ p["Wg"].astype(dtype)
+    xw = lerp(p["mu_w"]).astype(jnp.float32)
+    wlog = p["w0"] + jnp.tanh(xw @ p["wA"]) @ p["wB"]          # [B,S,D]
+    lw = jnp.maximum(-jnp.exp(wlog), LOG_DECAY_FLOOR).reshape(B, S, H, K)
+
+    s0 = (cache.wkv if cache is not None
+          else jnp.zeros((B, H, K, K), jnp.float32))
+    if S == 1 and cache is not None:  # decode: exact single-step recurrence
+        rr, kk, vv = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+        y = jnp.einsum("bhk,bhkv->bhv", rr,
+                       s0 + p["u"][None, :, :, None] * jnp.einsum(
+                           "bhk,bhv->bhkv", kk, vv))
+        s_fin = (jnp.exp(lw[:, 0])[..., None] * s0
+                 + jnp.einsum("bhk,bhv->bhkv", kk, vv))
+        y = y[:, None]
+    else:
+        y, s_fin = wkv_chunked(r, k, v, lw, p["u"], s0)
+    y = y.reshape(B, S, D).astype(dtype)
+    y = L.layernorm(p["ln_x"], y, cfg.norm_eps)  # group-norm stand-in
+    out = (y * jax.nn.silu(g)) @ p["Wo"].astype(dtype)
+    new_shift = x[:, -1]
+    return out, new_shift, s_fin
+
+
+def channel_mix(p, x, dtype, cache: RwkvCache | None):
+    B, S, D = x.shape
+    last = cache.shift_c if cache is not None else jnp.zeros((B, D), x.dtype)
+    xp = _shift(x, last)
+    xk = x + (xp - x) * p["mu_ck"].astype(dtype)
+    xr = x + (xp - x) * p["mu_cr"].astype(dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["cWk"].astype(dtype)))
+    out = jax.nn.sigmoid(xr @ p["cWr"].astype(dtype)) * (k @ p["cWv"].astype(dtype))
+    return out, x[:, -1]
+
+
+def block(p, x, cfg: ArchConfig, dtype, cache: RwkvCache | None = None):
+    att, shift_t, wkv = time_mix(p, L.layernorm(p["ln1"], x, cfg.norm_eps),
+                                 cfg, dtype, cache)
+    x = x + shard(att, "act_btd")
+    ffn, shift_c = channel_mix(p, L.layernorm(p["ln2"], x, cfg.norm_eps),
+                               dtype, cache)
+    x = x + shard(ffn, "act_btd")
+    new_cache = (RwkvCache(shift_t.astype(x.dtype), shift_c.astype(x.dtype), wkv)
+                 if cache is not None else None)
+    return x, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> RwkvCache:
+    H, K = dims(cfg)
+    return RwkvCache(jnp.zeros((batch, cfg.d_model), dtype),
+                     jnp.zeros((batch, cfg.d_model), dtype),
+                     jnp.zeros((batch, H, K, K), jnp.float32))
+
+
+# -- full model ---------------------------------------------------------------
+
+def init(key, cfg: ArchConfig):
+    ke, kb = jax.random.split(key)
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(bkeys)
+    return {"embed": L.init_embedding(ke, cfg.vocab, cfg.d_model),
+            "blocks": blocks, "ln_f": L.init_layernorm(cfg.d_model)}
+
+
+def forward(params, tokens, *, cfg: ArchConfig, remat: bool = True):
+    dtype = jnp.dtype(cfg.act_dtype)
+    x = shard(L.embed(params["embed"], tokens, dtype), "act_btd")
+
+    def body(blk, x):
+        return block(blk, x, cfg, dtype)[0]
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_body(x, blk):
+        return body(blk, x), None
+
+    x, _ = uscan(scan_body, x, params["blocks"])
+    return L.layernorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def loss(params, batch, *, cfg: ArchConfig):
+    hidden = forward(params, batch["tokens"], cfg=cfg)
+    return L.cross_entropy_chunked(hidden, params["embed"], batch["labels"])
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, n_chunks: int,
+                dtype=jnp.bfloat16):
+    del max_len, n_chunks  # O(1) state — the point of the architecture
+    return jax.vmap(lambda _: init_cache(cfg, batch, dtype))(
+        jnp.arange(cfg.n_layers))
+
+
+def _run_with_cache(params, x, caches, cfg: ArchConfig, dtype):
+    def scan_body(x, blk_cache):
+        blk, cache = blk_cache
+        x, cache = block(blk, x, cfg, dtype, cache)
+        return x, cache
+
+    x, caches = uscan(scan_body, x, (params["blocks"], caches))
+    return L.layernorm(params["ln_f"], x, cfg.norm_eps), caches
+
+
+def prefill(params, batch, caches, *, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.act_dtype)
+    x = shard(L.embed(params["embed"], batch["tokens"], dtype), "act_btd")
+    hidden, caches = _run_with_cache(params, x, caches, cfg, dtype)
+    lg = L.unembed(params["embed"], hidden[:, -1:])
+    return lg[:, 0], caches
+
+
+def decode_step(params, caches, batch, *, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.act_dtype)
+    x = L.embed(params["embed"], batch["token"], dtype)
+    hidden, caches = _run_with_cache(params, x, caches, cfg, dtype)
+    lg = L.unembed(params["embed"], hidden)
+    return lg[:, 0], caches

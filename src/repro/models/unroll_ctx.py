@@ -1,0 +1,42 @@
+"""Unroll context for dry-run cost probes.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count, so
+the depth-probe compiles (launch/dryrun.py) run with unrolling enabled: every
+layer scan / streaming loop in the package goes through ``scan``/``map_1``
+below, which fully unroll under this context. Production lowering keeps rolled
+loops (compile time, code size).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_UNROLL = False
+
+
+@contextmanager
+def unrolled(on: bool = True):
+    global _UNROLL
+    old = _UNROLL
+    _UNROLL = on
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+def active() -> bool:
+    return _UNROLL
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length, unroll=True if _UNROLL else 1)
+
+
+def map_1(f, xs):
+    """lax.map replacement honouring the unroll context."""
+    def body(_, x):
+        return None, f(x)
+    _, out = jax.lax.scan(body, None, xs, unroll=True if _UNROLL else 1)
+    return out

@@ -1,0 +1,43 @@
+"""AdamW (optional, for the smaller architectures / examples).
+
+Note: with ByzSGD each server replica would carry its own (m, v) — 3x replica
+memory. The framework permits it for layout-A archs; the paper's analysis is
+SGD-only, so examples default to sgd.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: any
+    v: any
+    count: jax.Array
+
+
+def init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def update(grads, state: AdamWState, params, lr, *, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.0):
+    c = state.count + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                     state.m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                     state.v, grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** c), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** c), v)
+    new_params = jax.tree.map(
+        lambda p, mh_, vh_: (p - lr * (mh_ / (jnp.sqrt(vh_) + eps)
+                                       + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+        params, mh, vh)
+    return new_params, AdamWState(m, v, c)
+
+
+OPTIMIZERS = {"sgd": None, "adamw": None}  # populated in __init__

@@ -1,0 +1,30 @@
+"""Learning-rate schedules satisfying the paper's conditions (B.1):
+monotone decreasing, sum eta = inf, sum eta^2 < inf."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inverse_sqrt(eta0: float = 0.1, warmup: int = 0, offset: float = 1.0):
+    def lr(t):
+        base = eta0 / jnp.sqrt(offset + t)
+        if warmup > 0:
+            base = base * jnp.minimum(1.0, (t + 1) / warmup)
+        return base
+    return lr
+
+
+def inverse_linear(eta0: float = 0.1, decay: float = 0.01):
+    # eta_t = eta0 / (1 + decay * t): sum = inf, sum^2 < inf for decay > 0... note
+    # sum eta^2 ~ 1/t converges; sum eta ~ log t diverges. Satisfies B.1.
+    def lr(t):
+        return eta0 / (1.0 + decay * t)
+    return lr
+
+
+def constant(eta0: float = 0.01):
+    """For throughput benchmarks only (violates sum eta_t^2 < inf)."""
+    def lr(t):
+        del t
+        return jnp.asarray(eta0)
+    return lr

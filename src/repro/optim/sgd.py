@@ -1,0 +1,19 @@
+"""Plain SGD — the paper's optimizer (Eq. 2): theta <- theta - eta_t * G.
+
+Stateless by design: ByzSGD's server replicas carry *no* moment state, which is
+what makes per-replica memory tractable at 100B+ scale (DESIGN.md layouts).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def init(params):
+    del params
+    return ()
+
+
+def update(grads, opt_state, params, lr):
+    new_params = jax.tree.map(
+        lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads)
+    return new_params, opt_state

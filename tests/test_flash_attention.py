@@ -1,0 +1,46 @@
+"""Pallas flash-attention kernel vs the naive oracle: shapes x dtypes x
+masking modes (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+CASES = [
+    # B, S, H, kvH, hd, causal, window, qb, kb
+    (2, 37, 4, 2, 16, True, 0, 8, 16),
+    (1, 64, 4, 4, 32, True, 7, 16, 16),
+    (2, 50, 6, 2, 64, False, 0, 16, 8),
+    (1, 130, 8, 8, 128, True, 0, 64, 64),
+    (3, 24, 2, 1, 8, True, 0, 8, 8),
+]
+
+
+@pytest.mark.parametrize("B,S,H,kvH,hd,causal,window,qb,kb", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(B, S, H, kvH, hd, causal, window, qb, kb, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, kvH, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, kvH, hd), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, q_block=qb,
+                          kv_block=kb, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_flash_decode_shape():
+    """Sq=1 against a long prefix (decode-style query)."""
+    B, Skv, H, hd = 2, 96, 4, 32
+    q = jax.random.normal(jax.random.fold_in(KEY, 4), (B, 1, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, Skv, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, Skv, H, hd))
+    got = flash_attention(q, k, v, causal=True, q_block=8, kv_block=32,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)

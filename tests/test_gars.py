@@ -1,0 +1,185 @@
+"""Unit + property tests for the GAR library (paper §3.1-3.2, Lemma 4.6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gars
+
+
+def rand(n, d, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+class TestPairwise:
+    def test_matches_bruteforce(self):
+        x = rand(7, 33)
+        d2 = gars.pairwise_sqdists(x)
+        brute = jnp.asarray([[jnp.sum((x[i] - x[j]) ** 2) for j in range(7)]
+                             for i in range(7)])
+        np.testing.assert_allclose(d2, brute, rtol=1e-4, atol=1e-4)
+
+    def test_gram_roundtrip(self):
+        x = rand(5, 17)
+        g = x @ x.T
+        np.testing.assert_allclose(gars.sqdists_from_gram(g),
+                                   gars.pairwise_sqdists(x), rtol=1e-4,
+                                   atol=1e-4)
+
+
+class TestMDA:
+    def test_subset_count(self):
+        assert gars.subset_masks(9, 2).shape == (36, 9)
+        assert gars.n_subsets(16, 5) == 4368
+
+    def test_excludes_outliers(self):
+        x = rand(9, 20)
+        x = x.at[7:].set(100.0)
+        sel = gars.mda_selection(gars.pairwise_sqdists(x), 2)
+        assert not bool(sel[7]) and not bool(sel[8])
+        assert int(jnp.sum(sel)) == 7
+
+    def test_greedy_vs_exact_clustered(self):
+        # one tight cluster + far outliers: both must pick the cluster
+        key = jax.random.PRNGKey(3)
+        x = 0.01 * jax.random.normal(key, (10, 8))
+        x = x.at[8].add(50.0).at[9].add(-50.0)
+        d2 = gars.pairwise_sqdists(x)
+        se = gars.mda_select_exact(d2, 2)
+        sg = gars.mda_select_greedy(d2, 2)
+        assert bool(jnp.all(se == sg))
+
+    def test_lemma_4_6_bounded_deviation(self):
+        """MDA output within the diameter of the correct set of one correct
+        gradient (Lemma 4.6), under any Byzantine placement."""
+        for seed in range(5):
+            x = rand(9, 16, seed=seed)
+            h = 7
+            byz = 100.0 * rand(2, 16, seed=seed + 50)
+            xs = jnp.concatenate([x[:h], byz])
+            agg = gars.mda(xs, 2)
+            diam = jnp.sqrt(jnp.max(gars.pairwise_sqdists(x[:h])))
+            dmin = jnp.min(jnp.linalg.norm(x[:h] - agg, axis=1))
+            assert float(dmin) <= float(diam) + 1e-4
+
+    def test_f0_is_mean(self):
+        x = rand(5, 9)
+        np.testing.assert_allclose(gars.mda(x, 0), jnp.mean(x, 0), rtol=1e-6)
+
+
+class TestMedianRules:
+    def test_median_within_bounds(self):
+        x = rand(9, 30)
+        m = gars.coordinate_median(x)
+        assert bool(jnp.all(m >= jnp.min(x, 0) - 1e-6))
+        assert bool(jnp.all(m <= jnp.max(x, 0) + 1e-6))
+
+    def test_masked_median_matches_subset(self):
+        x = rand(9, 12)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0, 1], bool)
+        got = gars.masked_coordinate_median(x, mask)
+        want = jnp.median(x[mask], axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_masked_median_even_quorum(self):
+        x = rand(8, 5)
+        mask = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], bool)
+        np.testing.assert_allclose(gars.masked_coordinate_median(x, mask),
+                                   jnp.median(x[:4], axis=0), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_trimmed_mean_and_meamed_resist(self):
+        x = rand(9, 10)
+        xs = x.at[8].set(1e5)
+        for rule in (gars.trimmed_mean, gars.meamed):
+            out = rule(xs, 1)
+            assert float(jnp.max(jnp.abs(out))) < 100.0
+
+
+class TestKrumFamily:
+    def test_krum_picks_clustered(self):
+        x = 0.1 * rand(9, 6)
+        xs = x.at[8].set(1e4)
+        out = gars.krum(xs, 2)
+        assert float(jnp.max(jnp.abs(out))) < 10.0
+
+    def test_multi_krum_and_bulyan(self):
+        x = 0.1 * rand(9, 6)
+        xs = x.at[8].set(1e4)
+        assert float(jnp.max(jnp.abs(gars.multi_krum(xs, 2)))) < 10.0
+        xs2 = 0.1 * rand(11, 6).at[10].set(1e4)
+        assert float(jnp.max(jnp.abs(gars.bulyan(xs2, 2)))) < 10.0
+
+
+class TestBounds:
+    def test_thresholds(self):
+        assert gars.mda_variance_threshold(18, 1) == pytest.approx(8.5)
+        assert gars.mda_variance_threshold(18, 5) == pytest.approx(1.3)
+        assert gars.krum_variance_threshold(18, 1) < gars.mda_variance_threshold(18, 1)
+        assert gars.krum_variance_threshold(18, 0) == float("inf")
+
+
+class TestTreeGar:
+    def test_tree_mda_equals_flat(self):
+        key = jax.random.PRNGKey(0)
+        trees = []
+        for i in range(7):
+            k = jax.random.fold_in(key, i)
+            trees.append({"a": jax.random.normal(k, (3, 4)),
+                          "b": jax.random.normal(jax.random.fold_in(k, 1), (5,))})
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+        got = gars.tree_gar(gars.mda, stacked, 2)
+        flat = jnp.stack([jnp.concatenate([t["a"].ravel(), t["b"]]) for t in trees])
+        want = gars.mda(flat, 2)
+        np.testing.assert_allclose(
+            jnp.concatenate([got["a"].ravel(), got["b"]]), want, rtol=1e-4,
+            atol=1e-5)
+
+
+# --------------------------- property-based ---------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(5, 12), f=st.integers(1, 3), d=st.integers(1, 24),
+       seed=st.integers(0, 10_000))
+def test_prop_mda_in_convex_hull(n, f, d, seed):
+    """MDA output is a convex combination of inputs => inside coordinate hull."""
+    if n < 2 * f + 1:
+        return
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    out = gars.mda(x, f)
+    assert bool(jnp.all(out >= jnp.min(x, 0) - 1e-4))
+    assert bool(jnp.all(out <= jnp.max(x, 0) + 1e-4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 12), d=st.integers(1, 16), seed=st.integers(0, 10_000),
+       q=st.integers(2, 12))
+def test_prop_masked_median_safety(n, d, seed, q):
+    """Lemma 4.2 ingredient: the masked median of any delivered subset lies
+    within the per-coordinate range of the delivered values."""
+    q = min(q, n)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    idx = jax.random.permutation(jax.random.fold_in(key, 1), n)[:q]
+    mask = jnp.zeros((n,), bool).at[idx].set(True)
+    m = gars.masked_coordinate_median(x, mask)
+    sub = x[mask]
+    assert bool(jnp.all(m >= jnp.min(sub, 0) - 1e-5))
+    assert bool(jnp.all(m <= jnp.max(sub, 0) + 1e-5))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(5, 10), f=st.integers(1, 2), d=st.integers(2, 12),
+       seed=st.integers(0, 1000), scale=st.floats(10.0, 1e4))
+def test_prop_mda_bounded_by_honest(n, f, d, seed, scale):
+    """No f Byzantine vectors can drag MDA beyond the honest diameter."""
+    if n < 2 * f + 1:
+        return
+    key = jax.random.PRNGKey(seed)
+    honest = jax.random.normal(key, (n - f, d))
+    byz = scale * jnp.ones((f, d))
+    out = gars.mda(jnp.concatenate([honest, byz]), f)
+    centre = jnp.mean(honest, axis=0)
+    diam = jnp.sqrt(jnp.max(gars.pairwise_sqdists(honest)))
+    assert float(jnp.linalg.norm(out - centre)) <= 2.0 * float(diam) + 1e-3

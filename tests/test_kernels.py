@@ -1,0 +1,68 @@
+"""Per-kernel allclose vs pure-jnp oracles, swept over shapes and dtypes
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gars
+from repro.kernels.cwise_median import ops as cm_ops
+from repro.kernels.cwise_median.ref import cwise_median_ref
+from repro.kernels.mda_diameter import ops as md_ops
+from repro.kernels.mda_diameter.ref import subset_diameters_ref
+from repro.kernels.pairwise_sqdist import ops as pd_ops
+from repro.kernels.pairwise_sqdist.ref import pairwise_sqdists_ref
+
+SHAPES = [(5, 64), (9, 130), (16, 777), (12, 4096), (32, 257)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_and_sqdist(n, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(n * d), (n, d), dtype)
+    got = pd_ops.pairwise_sqdists(x, interpret=True)
+    want = pairwise_sqdists_ref(x)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cwise_median(n, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(n + d), (n, d), dtype)
+    got = cm_ops.cwise_median(x, interpret=True)
+    want = cwise_median_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_d", [128, 512, 2048])
+def test_median_block_sweep(block_d):
+    x = jax.random.normal(jax.random.PRNGKey(7), (11, 1000))
+    got = cm_ops.cwise_median(x, block_d=block_d, interpret=True)
+    np.testing.assert_allclose(got, cwise_median_ref(x), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,f", [(7, 2), (9, 2), (12, 3), (16, 5)])
+def test_subset_diameters(n, f):
+    x = jax.random.normal(jax.random.PRNGKey(n * f), (n, 50))
+    d2 = pairwise_sqdists_ref(x)
+    masks = jnp.asarray(gars.subset_masks(n, f))
+    got = md_ops.subset_diameters(d2, masks, interpret=True)
+    want = subset_diameters_ref(d2, masks)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,f,d", [(9, 2, 100), (7, 1, 31), (13, 4, 256)])
+def test_full_mda_kernel_vs_gars(n, f, d):
+    x = jax.random.normal(jax.random.PRNGKey(n + f + d), (n, d))
+    got = md_ops.mda(x, f, interpret=True)
+    want = gars.mda(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mda_kernel_excludes_outlier():
+    x = jax.random.normal(jax.random.PRNGKey(0), (9, 64))
+    x = x.at[8].set(1e5)
+    out = md_ops.mda(x, 2, interpret=True)
+    assert float(jnp.max(jnp.abs(out))) < 100.0

@@ -1,0 +1,132 @@
+"""Per-architecture smoke + consistency tests (reduced configs).
+
+For every assigned arch: one forward/train step asserting shapes + finite
+values, gradient finiteness, and a prefill/decode CONSISTENCY check: chained
+decode logits must match a fresh prefill of the extended prefix (exercises
+every cache type: KV, SSM state, WKV state, hybrid, enc-dec cross)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import ARCH_IDS, get_bundle
+
+KEY = jax.random.PRNGKey(7)
+B, S = 2, 32
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def bundle(request):
+    return get_bundle(request.param, reduced=True)
+
+
+@pytest.fixture(scope="module")
+def params(bundle):
+    return bundle.init(jax.random.fold_in(KEY, 1))
+
+
+class TestSmoke:
+    def test_loss_and_grads_finite(self, bundle, params):
+        batch = bundle.make_batch("train", B, S, jax.random.fold_in(KEY, 2))
+        loss, grads = jax.value_and_grad(bundle.loss)(params, batch)
+        assert jnp.isfinite(loss), bundle.cfg.name
+        assert 1.0 < float(loss) < 20.0, (bundle.cfg.name, float(loss))
+        for leaf in jax.tree.leaves(grads):
+            assert bool(jnp.all(jnp.isfinite(leaf))), bundle.cfg.name
+
+    def test_prefill_decode_shapes(self, bundle, params):
+        caches = bundle.init_caches(B, max_len=S + 8, n_chunks=4)
+        pf = bundle.make_batch("prefill", B, S, jax.random.fold_in(KEY, 3))
+        logits, caches = bundle.prefill(params, pf, caches)
+        assert logits.shape == (B, bundle.cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        dec = bundle.make_batch("decode", B, S, jax.random.fold_in(KEY, 4))
+        logits2, _ = bundle.decode(params, caches, dec)
+        assert logits2.shape == (B, bundle.cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def _extend_batch(bundle, pf_batch, extra_tok, n):
+    """Prefill batch for prefix + n extra decode tokens."""
+    out = dict(pf_batch)
+    if "tokens" in out:
+        out["tokens"] = jnp.concatenate([out["tokens"]] + [extra_tok] * n, 1)
+    if "embeds" in out:
+        emb = out["embeds"]
+        out["embeds"] = jnp.concatenate([emb] + [emb[:, -1:]] * n, 1)
+    if "positions" in out and out["positions"].ndim == 3:
+        p = out["positions"]
+        last = p[:, :, -1:]
+        steps = [last + i + 1 for i in range(n)]
+        out["positions"] = jnp.concatenate([p] + steps, 2)
+    if "labels" in out:
+        del out["labels"]
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_prefill(arch):
+    """logits(decode chain) == logits(fresh prefill of the longer prefix)."""
+    bundle = get_bundle(arch, reduced=True)
+    params = bundle.init(jax.random.fold_in(KEY, 10))
+    S0, n_dec = 12, 3
+    pf = bundle.make_batch("prefill", B, S0, jax.random.fold_in(KEY, 11))
+    caches = bundle.init_caches(B, max_len=S0 + n_dec + 1, n_chunks=4,
+                                dtype=jnp.float32)
+    logits, caches = bundle.prefill(params, pf, caches)
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for i in range(n_dec):
+        dec = {"token": tok}
+        if bundle.cfg.family == "vlm":
+            emb = pf["embeds"][:, -1:]
+            pos = pf["positions"][:, :, -1:] + i + 1
+            dec = {"embeds": emb, "positions": pos}
+        logits, caches = bundle.decode(params, caches, dec)
+        # oracle: fresh prefill over prefix + decoded tokens
+        ext = _extend_batch(bundle, pf, tok, i + 1)
+        oracle_caches = bundle.init_caches(B, max_len=S0 + n_dec + 1,
+                                           n_chunks=4, dtype=jnp.float32)
+        want, _ = bundle.prefill(params, ext, oracle_caches)
+        np.testing.assert_allclose(
+            jax.nn.log_softmax(logits), jax.nn.log_softmax(want),
+            rtol=5e-2, atol=5e-2, err_msg=f"{arch} step {i}")
+
+
+def test_sliding_window_active():
+    """h2o-danube SWA: distant tokens must not influence decode logits."""
+    bundle = get_bundle("h2o-danube-3-4b", reduced=True, sliding_window=8)
+    params = bundle.init(jax.random.fold_in(KEY, 20))
+    S0 = 24
+    pf = bundle.make_batch("prefill", 1, S0, jax.random.fold_in(KEY, 21))
+    # two prefixes differing ONLY in the first token (outside the window)
+    toks_a = pf["tokens"]
+    toks_b = toks_a.at[:, 0].set((toks_a[:, 0] + 1) % bundle.cfg.vocab)
+    outs = []
+    for toks in (toks_a, toks_b):
+        caches = bundle.init_caches(1, max_len=S0 + 2, n_chunks=4,
+                                    dtype=jnp.float32)
+        logits, _ = bundle.prefill(params, {"tokens": toks}, caches)
+        outs.append(logits)
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-4, atol=1e-4)
+
+
+def test_configs_match_assignment():
+    """The exact assigned hyperparameters."""
+    import repro.configs.dbrx_132b as c1
+    import repro.configs.qwen3_moe_235b_a22b as c2
+    import repro.configs.rwkv6_3b as c3
+    import repro.configs.whisper_small as c4
+    a = c1.CONFIG
+    assert (a.n_layers, a.d_model, a.n_heads, a.n_kv_heads, a.d_ff,
+            a.vocab, a.n_experts, a.top_k) == (40, 6144, 48, 8, 10752,
+                                               100352, 16, 4)
+    b = c2.CONFIG
+    assert (b.n_layers, b.d_model, b.n_heads, b.n_kv_heads, b.d_ff,
+            b.vocab, b.n_experts, b.top_k) == (94, 4096, 64, 4, 1536,
+                                               151936, 128, 8)
+    assert (c3.CONFIG.n_layers, c3.CONFIG.d_model, c3.CONFIG.d_ff,
+            c3.CONFIG.vocab) == (32, 2560, 8960, 65536)
+    assert (c4.CONFIG.n_layers, c4.CONFIG.encoder_layers, c4.CONFIG.d_model,
+            c4.CONFIG.n_heads, c4.CONFIG.d_ff, c4.CONFIG.vocab) == (
+        12, 12, 768, 12, 3072, 51865)

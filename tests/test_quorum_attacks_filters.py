@@ -1,0 +1,104 @@
+"""quorum sampling, attack injection, filter math (unit + property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filters, quorum
+from repro.core.attacks import (ByzantineSpec, alie_zmax, inject_gradients,
+                                inject_models)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestQuorum:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(3, 20), q=st.integers(1, 20), seed=st.integers(0, 99))
+    def test_mask_cardinality(self, n, q, seed):
+        q = min(q, n)
+        m = quorum.sample_quorum_mask(jax.random.PRNGKey(seed), n, q)
+        assert int(jnp.sum(m)) == q
+
+    def test_include_self(self):
+        masks = quorum.receiver_quorum_masks(KEY, 6, 6, 3, include_self=True)
+        assert bool(jnp.all(jnp.diagonal(masks)))
+        assert bool(jnp.all(jnp.sum(masks, 1) == 3))
+
+    def test_indices_unique(self):
+        idx = quorum.receiver_quorum_indices(KEY, 5, 9, 6)
+        for row in idx:
+            assert len(set(row.tolist())) == 6
+
+    def test_validate_counts(self):
+        quorum.validate_counts(9, 2, 5, 1, 7, 4)
+        with pytest.raises(ValueError):
+            quorum.validate_counts(6, 2, 5, 1, 4, 4)
+
+
+class TestAttacks:
+    def _stack(self, n=7):
+        return {"w": jax.random.normal(KEY, (n, 4, 3)),
+                "b": jax.random.normal(jax.random.fold_in(KEY, 1), (n, 5))}
+
+    def test_honest_prefix_untouched(self):
+        g = self._stack()
+        spec = ByzantineSpec(worker_attack="reversed", n_byz_workers=2)
+        out = inject_gradients(g, spec, KEY)
+        np.testing.assert_array_equal(out["w"][:5], g["w"][:5])
+        assert not np.allclose(out["w"][5:], g["w"][5:])
+
+    def test_equivocation_distinct_per_receiver(self):
+        g = self._stack()
+        spec = ByzantineSpec(worker_attack="random", n_byz_workers=1,
+                             equivocate=True)
+        out = inject_gradients(g, spec, KEY, n_receivers=3)
+        assert out["w"].shape == (3, 7, 4, 3)
+        assert not np.allclose(out["w"][0, 6], out["w"][1, 6])
+        np.testing.assert_array_equal(out["w"][0, :6], out["w"][1, :6])
+
+    def test_model_attacks(self):
+        m = self._stack(5)
+        for atk in ("reversed", "partial_drop", "random", "lie"):
+            spec = ByzantineSpec(server_attack=atk, n_byz_servers=1)
+            out = inject_models(m, spec, KEY)
+            assert jax.tree.all(jax.tree.map(
+                lambda l: bool(jnp.all(jnp.isfinite(l))), out))
+
+    def test_alie_zmax_reasonable(self):
+        assert 0.0 < alie_zmax(24, 5) < 3.0
+
+    def test_no_attack_passthrough(self):
+        g = self._stack()
+        out = inject_gradients(g, ByzantineSpec(), KEY)
+        assert out is g
+
+
+class TestFilters:
+    def test_lipschitz_history_quantile(self):
+        h = filters.LipschitzHistory.create(8)
+        for v in [1.0, 1.1, 0.9, 1.05]:
+            h = h.push(jnp.float32(v))
+        ok = filters.lipschitz_pass(jnp.float32(1.0), h, n_ps=4, f_ps=1)
+        bad = filters.lipschitz_pass(jnp.float32(50.0), h, n_ps=4, f_ps=1)
+        assert bool(ok) and not bool(bad)
+
+    def test_empty_history_accepts(self):
+        h = filters.LipschitzHistory.create(8)
+        assert bool(filters.lipschitz_pass(jnp.float32(1e9), h, 4, 1))
+
+    def test_outliers_bound_grows_within_phase(self):
+        b1 = filters.outliers_bound(jnp.int32(1), 10, jnp.float32(0.1),
+                                    jnp.float32(1.0), 9, 2)
+        b2 = filters.outliers_bound(jnp.int32(9), 10, jnp.float32(0.1),
+                                    jnp.float32(1.0), 9, 2)
+        assert float(b2) > float(b1)
+
+    def test_outliers_pass(self):
+        a = {"w": jnp.zeros((3,))}
+        b = {"w": jnp.ones((3,))}
+        assert bool(filters.outliers_pass(a, a, jnp.float32(0.1)))
+        assert not bool(filters.outliers_pass(a, b, jnp.float32(0.1)))
+
+    def test_safe_T(self):
+        assert filters.safe_T(2.0, 0.05) == int(1 / (3 * 2.0 * 0.05))

@@ -1,0 +1,116 @@
+"""Protocol-semantics tests on the faithful single-host simulator."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.attacks import ByzantineSpec
+from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
+                                  coordinatewise_diameter_sum)
+from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.optim.schedules import inverse_linear
+
+MIX = MixtureSpec(n_classes=5, dim=16, sep=2.5)
+
+
+def make_sim(cfg):
+    init, loss, acc = make_mlp_problem(dim=MIX.dim, hidden=32,
+                                       n_classes=MIX.n_classes)
+    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.01))
+    return sim, acc
+
+
+def run(cfg, steps=40, batch=16, seed=0, track=False):
+    sim, acc = make_sim(cfg)
+    state = sim.init_state(jax.random.PRNGKey(seed))
+    stream, eval_set = classification_stream(seed, MIX, cfg.n_workers, batch,
+                                             steps)
+    ex, ey = eval_set(512)
+    state, logs = sim.run(state, stream, metrics_fn=lambda s: {
+        "acc": float(acc(jax.tree.map(lambda l: l[0], s.params), ex, ey)),
+        **({"delta": float(coordinatewise_diameter_sum(s.params,
+                                                       cfg.h_servers))}
+           if track else {})}, metrics_every=steps - 1)
+    return logs, state
+
+
+class TestAsync:
+    def test_clean_convergence(self):
+        logs, _ = run(ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5,
+                                   f_servers=1, T=5))
+        assert logs[-1]["acc"] > 0.75, logs
+
+    @pytest.mark.parametrize("attack", ["reversed", "alie", "sign_flip"])
+    def test_byzantine_workers_tolerated(self, attack):
+        cfg = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
+                           T=5, byz=ByzantineSpec(worker_attack=attack,
+                                                  n_byz_workers=2,
+                                                  equivocate=True))
+        logs, _ = run(cfg)
+        assert logs[-1]["acc"] > 0.70, (attack, logs)
+
+    @pytest.mark.parametrize("attack", ["reversed", "lie", "random",
+                                        "partial_drop"])
+    def test_byzantine_servers_tolerated(self, attack):
+        cfg = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
+                           T=5, byz=ByzantineSpec(server_attack=attack,
+                                                  n_byz_servers=1,
+                                                  equivocate=True))
+        logs, _ = run(cfg)
+        assert logs[-1]["acc"] > 0.70, (attack, logs)
+
+    def test_mean_gar_not_resilient(self):
+        """Sanity: plain averaging diverges/stalls under the reversed attack
+        (the paper's 'averaging tolerates not a single corrupted input')."""
+        byz = ByzantineSpec(worker_attack="reversed", n_byz_workers=2,
+                            attack_kwargs=(("scale", 10.0),), equivocate=True)
+        good = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5,
+                            f_servers=1, T=5, gar="mda", byz=byz)
+        bad = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5,
+                           f_servers=1, T=5, gar="mean", byz=byz)
+        g_logs, _ = run(good)
+        b_logs, _ = run(bad)
+        assert g_logs[-1]["acc"] > b_logs[-1]["acc"] + 0.15
+
+    def test_gather_contracts(self):
+        cfg = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
+                           T=5)
+        sim, _ = make_sim(cfg)
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream, _ = classification_stream(0, MIX, 7, 16, 5)
+        for b in stream:
+            state = sim.scatter_step(state, b)
+        d_pre = float(coordinatewise_diameter_sum(state.params, 4))
+        state = sim.gather_step(state)
+        d_post = float(coordinatewise_diameter_sum(state.params, 4))
+        assert d_post <= d_pre + 1e-6
+        assert d_post < 0.9 * d_pre  # expected strict contraction (Lemma 4.3)
+
+
+class TestSync:
+    def test_clean_convergence(self):
+        cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+                           T=5, variant="sync")
+        logs, _ = run(cfg)
+        assert logs[-1]["acc"] > 0.75
+
+    def test_byzantine_server_filtered(self):
+        cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+                           T=5, variant="sync",
+                           byz=ByzantineSpec(server_attack="reversed",
+                                             n_byz_servers=1, equivocate=True))
+        logs, _ = run(cfg)
+        assert logs[-1]["acc"] > 0.70
+
+
+class TestConfigValidation:
+    def test_counts_enforced(self):
+        with pytest.raises(ValueError):
+            ByzSGDConfig(n_workers=6, f_workers=2, n_servers=5, f_servers=1)
+        with pytest.raises(ValueError):
+            ByzSGDConfig(n_workers=7, f_workers=2, n_servers=4, f_servers=1)
+
+    def test_quorum_bounds(self):
+        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1)
+        assert cfg.q_workers >= 2 * cfg.f_workers + 1
+        assert cfg.q_servers >= 2 * cfg.f_servers + 2
