@@ -1,0 +1,24 @@
+# Convenience lanes around the tier-1 verify command (see ROADMAP.md).
+PY      := python
+ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 fast netsim bench examples
+
+# full tier-1 gate: everything, stop at first failure
+tier1:
+	$(ENV) $(PY) -m pytest -x -q
+
+# fast lane: skip the slow subprocess end-to-end drivers
+fast:
+	$(ENV) $(PY) -m pytest -q -m "not slow"
+
+# netsim subsystem only (tests + benchmark)
+netsim:
+	$(ENV) $(PY) -m pytest -q tests/test_netsim.py
+	$(ENV) $(PY) -m benchmarks.run --only netsim
+
+bench:
+	$(ENV) $(PY) -m benchmarks.run
+
+examples:
+	$(ENV) $(PY) examples/netsim_scenarios.py --steps 20

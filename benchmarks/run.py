@@ -20,6 +20,7 @@ EXPERIMENTS = [
     ("t_sensitivity", "exp_t_sensitivity"),
     ("filters", "exp_filters"),
     ("messages", "exp_messages"),
+    ("netsim", "exp_netsim"),
 ]
 
 

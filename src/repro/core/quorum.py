@@ -1,15 +1,24 @@
-"""Delivery-configuration sampling (asynchrony model).
+"""Delivery models (asynchrony abstraction) — pluggable via ``DeliveryModel``.
 
 The paper's asynchronous network is abstracted by *which* q-of-n messages a
 receiver delivers each step (Assumption 7: every delivering configuration has
-probability >= rho > 0). We sample quorums with a seeded PRNG so runs are
-reproducible and every configuration has positive probability — exactly the
-distribution S the contraction proof (Lemma C.5) averages over.
+probability >= rho > 0). Two implementations of the ``DeliveryModel``
+protocol feed the simulator:
+
+  * :class:`UniformDelivery` — seeded uniform sampling over configurations
+    (rho = 1/C(n,q), exactly the distribution S the contraction proof
+    Lemma C.5 averages over). This is the original behaviour.
+  * :class:`TraceDelivery` — *realized* quorums and staleness replayed from a
+    ``repro.netsim`` discrete-event run (latency tails, stragglers, crashes,
+    partitions), where delivery is biased toward fast nodes rather than
+    uniform.
 
 Masks double as the framework's **straggler-mitigation** policy at scale: a
 slow slice is simply outside the delivered quorum for that step.
 """
 from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +70,119 @@ def receiver_quorum_indices(key: jax.Array, n_recv: int, n_send: int, q: int,
 def full_quorum(n_recv: int, n_send: int) -> jax.Array:
     """Synchronous full delivery (no asynchrony)."""
     return jnp.ones((n_recv, n_send), bool)
+
+
+# --------------------------------------------------------------------------
+# Pluggable delivery models
+
+
+@runtime_checkable
+class DeliveryModel(Protocol):
+    """What the simulator needs from an asynchrony model: per-step delivered
+    sender indices for the three communication patterns. ``t`` is the traced
+    step counter (int32 scalar inside jit)."""
+
+    def pull_indices(self, key: jax.Array, t: jax.Array) -> jax.Array:
+        """[n_workers, q_servers] server ids each worker delivers at step t."""
+        ...
+
+    def push_indices(self, key: jax.Array, t: jax.Array) -> jax.Array:
+        """[n_servers, q_workers] worker ids each server delivers at step t."""
+        ...
+
+    def gather_indices(self, key: jax.Array, t: jax.Array) -> jax.Array:
+        """[n_servers, q_servers] server ids (incl. self) for the DMC gather
+        entered when the step counter reaches ``t`` (a multiple of T)."""
+        ...
+
+    def staleness(self, t: int) -> dict[str, float] | None:
+        """Mean per-message delivery staleness at step t (virtual ms), or
+        None if the model has no notion of time (uniform sampling)."""
+        ...
+
+
+class UniformDelivery:
+    """Assumption 7 as before: uniform q-of-n quorum sampling, seeded."""
+
+    def __init__(self, n_workers: int, n_servers: int, q_workers: int,
+                 q_servers: int):
+        self.n_workers, self.n_servers = n_workers, n_servers
+        self.q_workers, self.q_servers = q_workers, q_servers
+
+    @classmethod
+    def from_config(cls, cfg) -> "UniformDelivery":
+        return cls(cfg.n_workers, cfg.n_servers, cfg.q_workers, cfg.q_servers)
+
+    def pull_indices(self, key, t):
+        del t
+        return receiver_quorum_indices(key, self.n_workers, self.n_servers,
+                                       self.q_servers)
+
+    def push_indices(self, key, t):
+        del t
+        return receiver_quorum_indices(key, self.n_servers, self.n_workers,
+                                       self.q_workers)
+
+    def gather_indices(self, key, t):
+        del t
+        return receiver_quorum_indices(key, self.n_servers, self.n_servers,
+                                       self.q_servers, include_self=True)
+
+    def staleness(self, t):
+        del t
+        return None
+
+
+class TraceDelivery:
+    """Replay *realized* quorums from a netsim trace (repro.netsim).
+
+    Steps beyond the trace wrap around (t mod trace length), so a short
+    simulated trace can drive a longer training run. The gather trace is
+    indexed by round r = t/T - 1 — the simulator enters gather after the
+    scatter step that brings the counter to a multiple of T.
+    """
+
+    def __init__(self, pull_idx, push_idx, gather_idx, T: int,
+                 pull_stale=None, push_stale=None, gather_stale=None):
+        self.pull = jnp.asarray(pull_idx, jnp.int32)
+        self.push = jnp.asarray(push_idx, jnp.int32)
+        self.gather = jnp.asarray(gather_idx, jnp.int32)
+        if self.gather.ndim != 3 or self.gather.shape[0] == 0:
+            raise ValueError("gather trace must be [n_gathers>0, n_ps, q_ps]; "
+                             "simulate at least T steps")
+        self.T = int(T)
+        self.steps = int(self.pull.shape[0])
+        self._pull_stale = None if pull_stale is None else \
+            jnp.asarray(pull_stale, jnp.float32)
+        self._push_stale = None if push_stale is None else \
+            jnp.asarray(push_stale, jnp.float32)
+        self._gather_stale = None if gather_stale is None else \
+            jnp.asarray(gather_stale, jnp.float32)
+
+    def pull_indices(self, key, t):
+        del key
+        return self.pull[t % self.steps]
+
+    def push_indices(self, key, t):
+        del key
+        return self.push[t % self.steps]
+
+    def gather_indices(self, key, t):
+        del key
+        r = t // self.T - 1
+        return self.gather[r % self.gather.shape[0]]
+
+    def staleness(self, t):
+        """t: 0-based scatter step just executed (concrete int)."""
+        if self._pull_stale is None:
+            return None
+        k = int(t) % self.steps
+        out = {"staleness_pull_ms": float(jnp.mean(self._pull_stale[k])),
+               "staleness_push_ms": float(jnp.mean(self._push_stale[k]))}
+        if (int(t) + 1) % self.T == 0 and self._gather_stale is not None:
+            r = ((int(t) + 1) // self.T - 1) % self.gather.shape[0]
+            out["staleness_gather_ms"] = float(jnp.mean(self._gather_stale[r]))
+        return out
 
 
 def validate_counts(n_w: int, f_w: int, n_ps: int, f_ps: int,

@@ -21,7 +21,7 @@ from . import gars
 from .attacks import ByzantineSpec, inject_gradients, inject_models
 from .filters import (LipschitzHistory, lipschitz_coefficient, lipschitz_pass,
                       outliers_bound, outliers_pass)
-from .quorum import receiver_quorum_indices, validate_counts
+from .quorum import DeliveryModel, UniformDelivery, validate_counts
 
 
 @dataclass(frozen=True)
@@ -107,15 +107,22 @@ def l2_diameter(params, h_servers: int) -> jax.Array:
 
 
 class ByzSGDSimulator:
-    """init_fn(key) -> params; loss_fn(params, batch) -> scalar."""
+    """init_fn(key) -> params; loss_fn(params, batch) -> scalar.
+
+    ``delivery`` plugs in the asynchrony model (quorum.DeliveryModel):
+    UniformDelivery (Assumption 7, the default) or a netsim TraceDelivery
+    replaying realized quorums + staleness from a simulated cluster.
+    """
 
     def __init__(self, cfg: ByzSGDConfig, init_fn: Callable, loss_fn: Callable,
-                 lr_schedule: Callable[[jax.Array], jax.Array]):
+                 lr_schedule: Callable[[jax.Array], jax.Array],
+                 delivery: DeliveryModel | None = None):
         self.cfg = cfg
         self.init_fn = init_fn
         self.loss_fn = loss_fn
         self.lr = lr_schedule
         self.grad_fn = jax.grad(loss_fn)
+        self.delivery = delivery or UniformDelivery.from_config(cfg)
 
     # -- state ------------------------------------------------------------
     def init_state(self, key: jax.Array) -> SimState:
@@ -145,8 +152,7 @@ class ByzSGDSimulator:
         eta = self.lr(state.t)
 
         # 1. workers pull q_ps models, aggregate with Median ----------------
-        pull_idx = receiver_quorum_indices(k_pull, cfg.n_workers, cfg.n_servers,
-                                           cfg.q_servers)
+        pull_idx = self.delivery.pull_indices(k_pull, state.t)
         models_seen = inject_models(  # Byzantine servers may equivocate
             state.params, cfg.byz, k_matk,
             n_receivers=cfg.n_workers if cfg.byz.equivocates_models else None)
@@ -170,8 +176,7 @@ class ByzSGDSimulator:
             n_receivers=cfg.n_servers if cfg.byz.equivocates_grads else None)
 
         # 4. servers aggregate q_w gradients with the GAR and update ---------
-        push_idx = receiver_quorum_indices(k_push, cfg.n_servers, cfg.n_workers,
-                                           cfg.q_workers)
+        push_idx = self.delivery.push_indices(k_push, state.t)
         rule = gars.GAR_REGISTRY[cfg.gar]
 
         def server_update(sidx, qidx, p):
@@ -202,8 +207,7 @@ class ByzSGDSimulator:
     def gather_step(self, state: SimState) -> SimState:
         cfg = self.cfg
         key, k_q, k_atk = jax.random.split(state.key, 3)
-        gather_idx = receiver_quorum_indices(k_q, cfg.n_servers, cfg.n_servers,
-                                             cfg.q_servers, include_self=True)
+        gather_idx = self.delivery.gather_indices(k_q, state.t)
         models_seen = inject_models(
             state.params, cfg.byz, k_atk,
             n_receivers=cfg.n_servers if cfg.byz.equivocates_models else None)
@@ -343,5 +347,8 @@ class ByzSGDSimulator:
                 m["step"] = i
                 if "rejects" in diag:
                     m["rejects"] = int(jnp.sum(diag["rejects"]))
+                stal = self.delivery.staleness(i)
+                if stal:
+                    m.update(stal)
                 logs.append(m)
         return state, logs

@@ -27,7 +27,7 @@ import jax
 from ..configs.shapes import SHAPES, SHAPE_ORDER
 from ..models.registry import ARCH_IDS, get_bundle
 from . import hlo_analysis as H
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, use_mesh
 from .steps import build_cell, build_gather_cell
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -51,7 +51,7 @@ def lower_compile(cell, unroll: bool = False):
     from repro.models import unroll_ctx
     donate = {"train": (0,), "gather": (0,), "prefill": (2,), "decode": (1,)}[
         cell.meta["kind"]]
-    with jax.set_mesh(cell.mesh):
+    with use_mesh(cell.mesh):
         with unroll_ctx.unrolled(unroll):
             lowered = jax.jit(cell.fn, donate_argnums=donate).lower(*cell.in_specs)
         compiled = lowered.compile()

@@ -19,15 +19,44 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
+# --- JAX version compat -----------------------------------------------------
+# Newer JAX exposes jax.sharding.AxisType / jax.make_mesh(axis_types=...) /
+# jax.set_mesh; the pinned 0.4.x has none of these. All mesh construction and
+# ambient-mesh scoping must go through the helpers below so the rest of the
+# codebase stays version-agnostic.
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
 
 def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+    return (jax.sharding.AxisType.Auto,) * n if _HAS_AXIS_TYPE else None
+
+
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis_types where supported."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes)
+
+
+def _mk_mesh(devs, names):
+    if _HAS_AXIS_TYPE:
+        return Mesh(devs, names, axis_types=_auto(len(names)))
+    return Mesh(devs, names)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh: jax.set_mesh
+    on new JAX, the Mesh resource-env context on 0.4.x (Mesh is its own
+    context manager there)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def dp_size(mesh) -> int:
@@ -47,11 +76,10 @@ def make_byz_mesh(mesh, n_groups: int) -> Mesh:
         raise ValueError(f"n_groups={n_groups} must divide dp slices R={R}")
     K = R // n_groups
     devs = mesh.devices.reshape(n_groups, K, M)
-    return Mesh(devs, ("rep", "fsdp", "model"), axis_types=_auto(3))
+    return _mk_mesh(devs, ("rep", "fsdp", "model"))
 
 
 def make_serve_mesh(mesh) -> Mesh:
     """('data', 'model') flat view for serving (no replica axis)."""
     R, M = dp_size(mesh), model_size(mesh)
-    return Mesh(mesh.devices.reshape(R, M), ("data", "model"),
-                axis_types=_auto(2))
+    return _mk_mesh(mesh.devices.reshape(R, M), ("data", "model"))

@@ -20,7 +20,7 @@ from ..checkpoint import checkpointer as ck
 from ..core import protocol
 from ..models import sharding as shrules
 from ..models.registry import get_bundle
-from .mesh import make_serve_mesh
+from .mesh import compat_make_mesh, make_serve_mesh, use_mesh
 from .steps import serve_rules
 
 
@@ -41,14 +41,13 @@ def main(argv=None):
         d, m = (int(x) for x in args.mesh.split("x"))
     else:
         d, m = n_dev, 1
-    base = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    base = compat_make_mesh((d, m), ("data", "model"))
     smesh = make_serve_mesh(base)
 
     bundle = get_bundle(args.arch, reduced=args.reduced)
     rules = serve_rules(smesh, bundle.cfg)
 
-    with jax.set_mesh(smesh):
+    with use_mesh(smesh):
         if args.ckpt_dir and ck.latest_step(args.ckpt_dir) is not None:
             step = ck.latest_step(args.ckpt_dir)
             # restore replica-stacked state, outvote corruption, serve

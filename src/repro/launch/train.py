@@ -29,7 +29,7 @@ from ..data.pipeline import token_stream
 from ..models import sharding as shrules
 from ..models.registry import get_bundle
 from ..optim.schedules import inverse_linear
-from .mesh import make_byz_mesh
+from .mesh import compat_make_mesh, make_byz_mesh, use_mesh
 from .steps import train_rules
 
 
@@ -59,8 +59,7 @@ def main(argv=None):
     else:
         m = 1
         d = n_dev
-    base = jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    base = compat_make_mesh((d, m), ("data", "model"))
     G = args.groups or d
     bmesh = make_byz_mesh(base, G)
 
@@ -87,7 +86,7 @@ def main(argv=None):
         mesh=bmesh)
     rules = train_rules(bmesh, bundle.cfg)
 
-    with jax.set_mesh(bmesh):
+    with use_mesh(bmesh):
         shardings = protocol.state_shardings(
             jax.eval_shape(init, jax.random.PRNGKey(0)), bmesh,
             overrides=protocol.attn_overrides(bundle.cfg, bmesh))

@@ -1,0 +1,21 @@
+"""repro.netsim — event-driven cluster/network simulation for ByzSGD.
+
+Replaces the uniform q-of-n abstraction of Assumption 7 with a discrete-event
+simulation of the actual scatter/gather message schedule: per-link latency
+models, fault injectors (crash/recovery, partitions, drops/duplication, slow
+churn), and per-node message/byte accounting. A run produces a
+:class:`~repro.netsim.cluster.NetsimTrace` whose *realized* per-step quorums
+and staleness tensors plug into the protocol simulator through
+``repro.core.quorum.TraceDelivery``.
+
+Quick start::
+
+    from repro.netsim import scenarios, cluster
+    sc = scenarios.get("heavy_tail_stragglers", steps=20)
+    trace = cluster.ClusterSim(sc).run()
+    print(trace.ledger.summary(sc))
+    delivery = trace.to_delivery()      # feed to ByzSGDSimulator(delivery=...)
+"""
+from . import accounting, cluster, events, faults, latency, scenarios  # noqa: F401
+from .cluster import ClusterSim, NetsimTrace  # noqa: F401
+from .scenarios import SCENARIOS, Scenario  # noqa: F401

@@ -1,0 +1,159 @@
+"""Declarative scenario library for the netsim engine.
+
+A :class:`Scenario` bundles cluster shape (same resilience preconditions as
+``ByzSGDConfig``), the latency/compute models, a fault plan, and payload
+sizes. The registry maps names to factories; every factory accepts keyword
+overrides (``steps=…``, ``seed=…``, ``model_d=…``) forwarded to the dataclass
+so tests and benchmarks can shrink or scale runs::
+
+    sc = scenarios.get("crash_storm", steps=20, seed=3)
+    trace = ClusterSim(sc).run()
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+from repro.core.quorum import validate_counts
+
+from .faults import (CrashPlan, CrashWindow, FaultPlan, LossyLink,
+                     PartitionPlan, PartitionWindow, SlowChurn)
+from .latency import (ComputeTime, LatencyModel, LognormalLatency,
+                      ParetoLatency, TopologyLatency)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str = "baseline_uniform"
+    # cluster shape (paper Table 1 preconditions enforced in __post_init__)
+    n_workers: int = 9
+    f_workers: int = 2
+    n_servers: int = 5
+    f_servers: int = 1
+    q_workers: int | None = None
+    q_servers: int | None = None
+    T: int = 5
+    steps: int = 30
+    # payload: model dimension in scalars (d) and bytes per scalar
+    model_d: int = 79_510          # paper's MNIST CNN
+    dtype_bytes: int = 4
+    # timing
+    latency: LatencyModel = field(default_factory=LognormalLatency)
+    compute: ComputeTime = field(default_factory=ComputeTime)
+    update_ms: float = 0.5
+    bandwidth_gbps: float | None = None
+    # faults + reproducibility
+    faults: FaultPlan = field(default_factory=FaultPlan)
+    seed: int = 0
+    max_events: int = 5_000_000
+    # Byzantine roles (consumed by the protocol simulator, not the network:
+    # netsim only makes these nodes slow/faulty; attacks are injected by
+    # repro.core.attacks when the trace drives ByzSGDSimulator)
+    worker_attack: str | None = None
+    server_attack: str | None = None
+    n_byz_workers: int = 0
+    n_byz_servers: int = 0
+
+    def __post_init__(self):
+        qw = self.q_workers or (self.n_workers - self.f_workers)
+        qs = self.q_servers or max(self.n_servers - self.f_servers,
+                                   2 * self.f_servers + 2)
+        object.__setattr__(self, "q_workers", qw)
+        object.__setattr__(self, "q_servers", qs)
+        validate_counts(self.n_workers, self.f_workers, self.n_servers,
+                        self.f_servers, qw, qs)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# factories — each returns a Scenario; kwargs override any dataclass field.
+
+def baseline_uniform(**kw) -> Scenario:
+    """Well-behaved cluster: tight lognormal links, no faults. The analytic
+    communication model of exp_messages should hold exactly."""
+    kw.setdefault("latency", LognormalLatency(1.0, 0.05))
+    return Scenario(name="baseline_uniform", **kw)
+
+
+def heavy_tail_stragglers(**kw) -> Scenario:
+    """Pareto link tail + a rotating set of persistently slow workers: the
+    regime where realized quorums are *biased* toward fast nodes, unlike
+    Assumption 7's uniform sampling."""
+    n_w = kw.pop("n_workers", 9)
+    kw.setdefault("latency", ParetoLatency(0.5, alpha=1.6))
+    kw.setdefault("faults", FaultPlan(
+        churn=SlowChurn(n_nodes=5 + n_w, n_slow=2, factor=12.0,
+                        period_ms=40.0)))
+    return Scenario(name="heavy_tail_stragglers", n_workers=n_w, **kw)
+
+
+def partitioned_dmc(**kw) -> Scenario:
+    """Two-zone topology; mid-run a partition isolates a minority of servers,
+    starving their DMC gather quorums (visible as shortfalls + diameter
+    blow-up on the isolated side)."""
+    n_ps = kw.pop("n_servers", 5)
+    n_w = kw.pop("n_workers", 9)
+    zone_of = tuple(i % 2 for i in range(n_ps + n_w))
+    kw.setdefault("latency", TopologyLatency(
+        zone_of=zone_of, zone_ms=((0.5, 2.5), (2.5, 0.5)),
+        jitter=LognormalLatency(1.0, 0.1)))
+    minority = tuple(s for s in range(n_ps) if s % 2 == 1)
+    majority = tuple(i for i in range(n_ps + n_w) if i not in minority)
+    kw.setdefault("faults", FaultPlan(partitions=PartitionPlan((
+        PartitionWindow(t0=80.0, t1=220.0, groups=(majority, minority)),))))
+    return Scenario(name="partitioned_dmc", n_servers=n_ps, n_workers=n_w,
+                    **kw)
+
+
+def crash_storm(**kw) -> Scenario:
+    """Staggered fail-stop crashes with recovery, never exceeding the declared
+    f bounds simultaneously: liveness holds but quorums shift and late/dropped
+    traffic spikes."""
+    n_ps = kw.pop("n_servers", 5)
+    n_w = kw.pop("n_workers", 9)
+    windows = [CrashWindow(node=0, t_down=40.0, t_up=120.0),          # server
+               CrashWindow(node=n_ps + 1, t_down=60.0, t_up=160.0),   # worker
+               CrashWindow(node=n_ps + 4, t_down=150.0, t_up=260.0),
+               CrashWindow(node=2, t_down=200.0, t_up=280.0)]         # server
+    kw.setdefault("faults", FaultPlan(
+        crashes=CrashPlan(tuple(windows)),
+        lossy=LossyLink(p_drop=0.01, p_dup=0.005)))
+    kw.setdefault("latency", LognormalLatency(1.0, 0.3))
+    return Scenario(name="crash_storm", n_servers=n_ps, n_workers=n_w, **kw)
+
+
+def byzantine_plus_slow(**kw) -> Scenario:
+    """The compound adversary: f_w Byzantine workers that are ALSO slow (their
+    messages arrive last, maximizing their staleness leverage) — netsim makes
+    them slow, the simulator's attack injection makes them malicious."""
+    n_ps = kw.pop("n_servers", 5)
+    n_w = kw.pop("n_workers", 9)
+    f_w = kw.pop("f_workers", 2)
+    byz_nodes = tuple(n_ps + n_w - 1 - i for i in range(f_w))  # last workers
+    kw.setdefault("faults", FaultPlan(
+        churn=SlowChurn(n_nodes=n_ps + n_w, n_slow=f_w, factor=8.0,
+                        only=byz_nodes)))
+    kw.setdefault("latency", LognormalLatency(1.0, 0.25))
+    kw.setdefault("worker_attack", "alie")
+    kw.setdefault("n_byz_workers", f_w)
+    return Scenario(name="byzantine_plus_slow", n_servers=n_ps, n_workers=n_w,
+                    f_workers=f_w, **kw)
+
+
+SCENARIOS = {
+    "baseline_uniform": baseline_uniform,
+    "heavy_tail_stragglers": heavy_tail_stragglers,
+    "partitioned_dmc": partitioned_dmc,
+    "crash_storm": crash_storm,
+    "byzantine_plus_slow": byzantine_plus_slow,
+}
+
+
+def get(name: str, **kw) -> Scenario:
+    try:
+        return SCENARIOS[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}") from None

@@ -10,14 +10,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import protocol  # noqa: E402
 from repro.core.attacks import ByzantineSpec  # noqa: E402
-from repro.launch.mesh import make_byz_mesh  # noqa: E402
+from repro.launch.mesh import (compat_make_mesh, make_byz_mesh,  # noqa: E402
+                               use_mesh)
 from repro.models.registry import get_bundle  # noqa: E402
 from repro.optim.schedules import inverse_linear  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((4, 2), ("data", "model"))
     bmesh = make_byz_mesh(mesh, n_groups=4)
     bundle = get_bundle("phi4-mini-3.8b", reduced=True)
 
@@ -26,7 +26,7 @@ def main():
         init = protocol.make_init_fn(bundle, pcfg)
         step = protocol.make_train_step(bundle, pcfg,
                                         inverse_linear(0.05, 0.01), mesh=bmesh)
-        with jax.set_mesh(bmesh):
+        with use_mesh(bmesh):
             state = jax.jit(init)(jax.random.PRNGKey(0))
             shardings = protocol.state_shardings(
                 jax.eval_shape(init, jax.random.PRNGKey(0)), bmesh,
@@ -60,7 +60,7 @@ def main():
     init = protocol.make_init_fn(bundle, pcfg)
     step = protocol.make_train_step(bundle, pcfg, inverse_linear(0.05, 0.01),
                                     with_attack=True, mesh=bmesh)
-    with jax.set_mesh(bmesh):
+    with use_mesh(bmesh):
         state = jax.jit(init)(jax.random.PRNGKey(0))
         G, B, S = 4, 2, 16
         batch = bundle.make_batch("train", G * B, S, jax.random.PRNGKey(1))

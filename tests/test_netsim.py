@@ -1,0 +1,165 @@
+"""repro.netsim: determinism, quorum validity, analytic cross-validation,
+and trace-driven protocol behaviour (DMC contraction under stragglers)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.quorum import TraceDelivery, UniformDelivery
+from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
+                                  coordinatewise_diameter_sum)
+from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.netsim import ClusterSim, scenarios
+from repro.netsim.accounting import compare_with_model
+
+SMALL = dict(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
+             T=5, steps=10, model_d=1000)
+
+
+def _run(name, **kw):
+    sc = scenarios.get(name, **{**SMALL, **kw})
+    return sc, ClusterSim(sc).run()
+
+
+class TestDeterminism:
+    def test_same_seed_bit_identical(self):
+        _, a = _run("crash_storm", seed=11)
+        _, b = _run("crash_storm", seed=11)
+        for f in ("pull_idx", "push_idx", "gather_idx", "pull_stale",
+                  "push_stale", "gather_stale", "step_done_ms"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+        assert a.ledger == b.ledger
+        assert a.events == b.events and a.shortfalls == b.shortfalls
+
+    def test_seed_changes_trace(self):
+        _, a = _run("heavy_tail_stragglers", seed=0)
+        _, b = _run("heavy_tail_stragglers", seed=1)
+        assert not np.array_equal(a.pull_stale, b.pull_stale)
+
+
+class TestQuorumValidity:
+    def test_uniform_quorums_exact(self):
+        sc, t = _run("baseline_uniform")
+        assert t.pull_idx.shape == (sc.steps, sc.n_workers, sc.q_servers)
+        assert t.push_idx.shape == (sc.steps, sc.n_servers, sc.q_workers)
+        # exactly q distinct senders, all in range
+        for arr, n in ((t.pull_idx, sc.n_servers), (t.push_idx, sc.n_workers)):
+            assert arr.min() >= 0 and arr.max() < n
+            for row in arr.reshape(-1, arr.shape[-1]):
+                assert len(set(row.tolist())) == arr.shape[-1]
+        assert t.shortfalls == 0
+
+    @pytest.mark.parametrize("name", ["baseline_uniform",
+                                      "heavy_tail_stragglers", "crash_storm"])
+    def test_gather_includes_self(self, name):
+        """A server always aggregates its own model — even when remote models
+        arrive before the (straggling) server enters the gather round."""
+        sc, t = _run(name, steps=20)
+        assert t.gather_idx.shape[0] == sc.steps // sc.T
+        for r in range(t.gather_idx.shape[0]):
+            for s in range(sc.n_servers):
+                assert t.gather_idx[r, s][0] == s  # own model always first
+
+    def test_staleness_nonnegative_and_populated(self):
+        _, t = _run("heavy_tail_stragglers")
+        assert (t.pull_stale >= 0).all() and (t.push_stale >= 0).all()
+        assert t.pull_stale.max() > 0
+
+
+class TestAccounting:
+    def test_uniform_matches_analytic_model(self):
+        """Acceptance: per-step message/byte totals within 1% of
+        exp_messages.model_bytes on the no-fault uniform scenario."""
+        sc, t = _run("baseline_uniform", steps=20)
+        cmp = compare_with_model(t.ledger, sc, sc.steps, t.n_gathers)
+        assert set(cmp) == {"worker_rx", "worker_tx", "server_rx",
+                            "server_tx", "dmc_server_exchange"}
+        for k, (sim, analytic, rel) in cmp.items():
+            assert rel < 0.01, (k, sim, analytic)
+
+    def test_faults_visible_in_ledger(self):
+        _, t = _run("crash_storm", steps=20)
+        tot = t.ledger.totals()
+        dropped = sum(d["dropped_msgs"] for d in tot.values())
+        assert dropped > 0
+        _, t2 = _run("partitioned_dmc", steps=20)
+        tot2 = t2.ledger.totals()
+        assert sum(d["dropped_msgs"] for d in tot2.values()) > 0
+        assert t2.shortfalls > 0  # partition starved some quorums
+
+    def test_trace_always_complete_under_faults(self):
+        sc, t = _run("crash_storm", steps=20)
+        # every quorum slot filled with a valid sender id even under crashes
+        assert t.pull_idx.min() >= 0 and t.pull_idx.max() < sc.n_servers
+        assert t.push_idx.min() >= 0 and t.push_idx.max() < sc.n_workers
+        assert t.gather_idx.min() >= 0 and t.gather_idx.max() < sc.n_servers
+
+
+MIX = MixtureSpec(n_classes=5, dim=16, sep=2.5)
+
+
+def _sim(delivery):
+    cfg = ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5, f_servers=1, T=5)
+    init, loss, _ = make_mlp_problem(dim=MIX.dim, hidden=32,
+                                     n_classes=MIX.n_classes)
+    from repro.optim.schedules import inverse_linear
+    return cfg, ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.01),
+                                delivery=delivery)
+
+
+class TestTraceDelivery:
+    def test_heavy_tail_dmc_still_contracts(self):
+        """Acceptance: under the seeded heavy-tail straggler scenario, the
+        DMC gather still shrinks correct-server diameter (Lemma 4.3 holds for
+        ANY delivery schedule, not just uniform ones)."""
+        sc, trace = _run("heavy_tail_stragglers")
+        cfg, sim = _sim(trace.to_delivery())
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream, _ = classification_stream(0, MIX, cfg.n_workers, 16, cfg.T)
+        for b in stream:
+            state = sim.scatter_step(state, b)
+        d_pre = float(coordinatewise_diameter_sum(state.params, cfg.h_servers))
+        state = sim.gather_step(state)
+        d_post = float(coordinatewise_diameter_sum(state.params, cfg.h_servers))
+        assert d_post <= d_pre + 1e-6
+        assert d_post < 0.9 * d_pre
+
+    def test_trace_driven_run_deterministic(self):
+        _, trace = _run("heavy_tail_stragglers")
+
+        def go():
+            cfg, sim = _sim(trace.to_delivery())
+            state = sim.init_state(jax.random.PRNGKey(0))
+            stream, _ = classification_stream(0, MIX, cfg.n_workers, 16, 8)
+            state, logs = sim.run(state, stream, metrics_fn=lambda s: {
+                "delta": float(coordinatewise_diameter_sum(s.params, 4))},
+                metrics_every=7)
+            return logs
+        a, b = go(), go()
+        assert a == b
+        assert "staleness_pull_ms" in a[-1]  # staleness threaded into metrics
+
+    def test_uniform_delivery_unchanged(self):
+        """The refactor keeps the default path identical: UniformDelivery is
+        what ByzSGDSimulator uses when no delivery model is given."""
+        cfg, sim = _sim(None)
+        assert isinstance(sim.delivery, UniformDelivery)
+        k = jax.random.PRNGKey(0)
+        from repro.core.quorum import receiver_quorum_indices
+        np.testing.assert_array_equal(
+            sim.delivery.pull_indices(k, 0),
+            receiver_quorum_indices(k, cfg.n_workers, cfg.n_servers,
+                                    cfg.q_servers))
+
+    def test_trace_wraps_past_end(self):
+        _, trace = _run("baseline_uniform")
+        d = trace.to_delivery()
+        k = jax.random.PRNGKey(0)
+        np.testing.assert_array_equal(d.pull_indices(k, 3),
+                                      d.pull_indices(k, 3 + trace.scenario.steps))
+
+    def test_gather_trace_required(self):
+        with pytest.raises(ValueError):
+            TraceDelivery(np.zeros((5, 7, 4), np.int32),
+                          np.zeros((5, 5, 5), np.int32),
+                          np.zeros((0, 5, 4), np.int32), T=10)
