@@ -2,7 +2,7 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fast netsim bench examples
+.PHONY: tier1 fast netsim agg-bench bench examples
 
 # full tier-1 gate: everything, stop at first failure
 tier1:
@@ -16,6 +16,10 @@ fast:
 netsim:
 	$(ENV) $(PY) -m pytest -q tests/test_netsim.py
 	$(ENV) $(PY) -m benchmarks.run --only netsim
+
+# aggregator backend timings (jnp vs Pallas per registry rule)
+agg-bench:
+	$(ENV) $(PY) -m benchmarks.run --only agg
 
 bench:
 	$(ENV) $(PY) -m benchmarks.run

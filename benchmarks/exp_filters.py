@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax
 
+import repro.agg as agg
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
 from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
@@ -18,14 +19,14 @@ from repro.optim.schedules import inverse_linear
 from .common import DEFAULT_MIX
 
 
-def _run(byz, steps, T):
+def _run(byz, steps, T, gar="mda"):
     # Calibration (see EXPERIMENTS.md): Assumption 6 requires ||grad L||
     # bounded away from 0 — enforced via the paper's own prescription
     # (L2 regularisation) + batch 100 so the empirical Lipschitz-coefficient
     # distribution is tight. The quantile level (n_ps-f_ps)/n_ps itself
     # implies an FN floor when the k-distribution is broad.
     cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
-                       T=T, variant="sync", lip_horizon=32, byz=byz)
+                       T=T, variant="sync", lip_horizon=32, gar=gar, byz=byz)
     init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=64, l2=3e-2)
     sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.001))
     state = sim.init_state(jax.random.PRNGKey(0))
@@ -49,16 +50,16 @@ def _run(byz, steps, T):
     return {"reject_ratio": reject_ratio, "fn_ratio_est": fn_ratio}
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, gar: str = "mda"):
     steps = 100 if quick else 500
     out = {}
     for T in ([5, 20] if quick else [1, 5, 20, 50]):
-        out[f"clean_T{T}"] = _run(ByzantineSpec(), steps, T)
+        out[f"clean_T{T}"] = _run(ByzantineSpec(), steps, T, gar)
     for atk in (["reversed", "lie"] if quick else
                 ["reversed", "lie", "random", "partial_drop"]):
         out[f"{atk}_T20"] = _run(
             ByzantineSpec(server_attack=atk, n_byz_servers=1,
-                          equivocate=True), steps, 20)
+                          equivocate=True), steps, 20, gar)
     return out
 
 
@@ -76,3 +77,19 @@ def summarize(res: dict) -> str:
         "tight distribution at CIFAR scale. Qualitative claims (bounded FN, "
         f"Byzantine payloads rejected) {'hold' if clean_ok else 'CHECK'}.")
     return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    # worker-gradient rule choices come from the registry (pytree-capable)
+    ap.add_argument("--gar", default="mda",
+                    choices=[n for n in agg.names()
+                             if agg.get(n).tree_mode is not None])
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print(summarize(run(quick=not args.full, gar=args.gar)))
+
+
+if __name__ == "__main__":
+    main()

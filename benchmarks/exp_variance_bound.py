@@ -13,8 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import repro.agg as agg
 from repro.configs.paper_models import make_mlp_problem
-from repro.core import gars
 from repro.data.pipeline import MixtureSpec, classification_stream
 from repro.optim.schedules import inverse_linear
 
@@ -54,8 +54,8 @@ def run(quick: bool = True):
         out["ratios"][b] = measure_ratio(b, steps=30 if quick else 100)
     for f in (1, 5):
         out["bounds"][f] = {
-            "mda": gars.mda_variance_threshold(n_w, f),
-            "krum": gars.krum_variance_threshold(n_w, f),
+            "mda": agg.get("mda").variance_threshold(n_w, f),
+            "krum": agg.get("krum").variance_threshold(n_w, f),
         }
     return out
 

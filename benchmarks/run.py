@@ -21,6 +21,7 @@ EXPERIMENTS = [
     ("filters", "exp_filters"),
     ("messages", "exp_messages"),
     ("netsim", "exp_netsim"),
+    ("agg", "exp_agg_backends"),
 ]
 
 

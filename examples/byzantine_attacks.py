@@ -1,13 +1,17 @@
 """Attack gallery: what breaks vanilla averaging, and what ByzSGD absorbs.
 
-For each attack we train twice — once with the non-resilient `mean` GAR (the
-classical parameter-server baseline) and once with ByzSGD's MDA — and print
-final accuracies side by side.
+For each attack we train twice — once with the non-resilient `mean` rule (the
+classical parameter-server baseline) and once with a resilient rule from the
+repro.agg registry (MDA by default; pick any with --gar) — and print final
+accuracies side by side.
 
-    PYTHONPATH=src python examples/byzantine_attacks.py
+    PYTHONPATH=src python examples/byzantine_attacks.py [--gar krum]
 """
+import argparse
+
 import jax
 
+import repro.agg as agg
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
 from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
@@ -30,6 +34,12 @@ def train(gar: str, byz: ByzantineSpec, steps: int = 120) -> float:
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gar", default="mda",
+                    choices=[n for n in agg.names()
+                             if agg.get(n).tree_mode is not None and n != "mean"])
+    args = ap.parse_args()
+    spec = agg.get(args.gar)
     attacks = {
         "none": ByzantineSpec(),
         "reversed x10": ByzantineSpec(worker_attack="reversed",
@@ -41,13 +51,14 @@ def main():
         "sign flip": ByzantineSpec(worker_attack="sign_flip", n_byz_workers=2,
                                    equivocate=True),
     }
-    print(f"{'attack':14s} {'mean (vanilla)':>15s} {'MDA (ByzSGD)':>14s}")
+    col = f"{args.gar} (ByzSGD)"
+    print(f"{'attack':14s} {'mean (vanilla)':>15s} {col:>16s}")
     for name, byz in attacks.items():
         a_mean = train("mean", byz)
-        a_mda = train("mda", byz)
-        print(f"{name:14s} {a_mean:15.3f} {a_mda:14.3f}")
-    print("\naveraging 'does not tolerate a single corrupted input' (paper "
-          "§1); MDA does.")
+        a_gar = train(args.gar, byz)
+        print(f"{name:14s} {a_mean:15.3f} {a_gar:16.3f}")
+    print(f"\naveraging 'does not tolerate a single corrupted input' (paper "
+          f"§1); {args.gar} ({spec.doc}; breakdown {spec.breakdown}) does.")
 
 
 if __name__ == "__main__":

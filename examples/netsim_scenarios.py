@@ -32,7 +32,7 @@ def train_on_trace(sc, trace, steps: int):
                         equivocate=bool(sc.worker_attack or sc.server_attack))
     cfg = ByzSGDConfig(n_workers=sc.n_workers, f_workers=sc.f_workers,
                        n_servers=sc.n_servers, f_servers=sc.f_servers,
-                       T=sc.T, byz=byz)
+                       T=sc.T, gar=sc.gar, byz=byz)
     init, loss, acc = make_mlp_problem(dim=MIX.dim, hidden=32,
                                        n_classes=MIX.n_classes)
     sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.01),

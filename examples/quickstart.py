@@ -23,7 +23,8 @@ def main():
         n_workers=9, f_workers=2,      # n_w >= 3 f_w + 1
         n_servers=5, f_servers=1,      # n_ps >= 3 f_ps + 2
         T=10,                          # DMC gather every T steps
-        gar="mda",                     # Minimum-Diameter Averaging
+        gar="mda",                     # Minimum-Diameter Averaging — any
+                                       # repro.agg registry rule works here
         byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2,
                           equivocate=True),
     )

@@ -1,0 +1,41 @@
+"""repro.agg — the unified Aggregator API.
+
+One entry point for every Byzantine-resilient gradient aggregation rule
+(GAR) in the codebase, replacing the loose functions of the old
+``repro.core.gars`` module (which remains as a deprecation shim):
+
+    import repro.agg as agg
+
+    agg.get("mda")(x, f)                    # flat [n,d] stack
+    agg.get("median")(x, f, mask=delivered) # masked delivery (asynchrony)
+    agg.tree_agg("mda", stacked_tree, f)    # pytree with [n, ...] leaves
+    agg.selection_weights("mda", d2, f)     # sharded protocol (own distances)
+    agg.aggregate("krum", x, f)             # functional spelling of get()(…)
+
+Rules are described by :class:`~repro.agg.registry.Aggregator` specs (name,
+breakdown point, variance threshold, capability flags) and dispatch to either
+the pure-jnp reference or the Pallas kernels (``backend="auto"|"jnp"|"pallas"``,
+see :mod:`repro.agg.dispatch`). ``python -m repro.agg`` prints the registry
+table used in the README.
+"""
+from __future__ import annotations
+
+from . import dispatch, registry, rules, tree
+from .dispatch import (cwise_median, default_backend, pairwise_sqdists,
+                       resolve_backend, subset_diameters)
+from .registry import Aggregator, get, markdown_table, names, register, specs
+from .tree import selection_weights, tree_agg, tree_gram
+
+
+def aggregate(rule, x, f: int = 0, **kw):
+    """Functional spelling of ``get(rule)(x, f, **kw)``."""
+    spec = rule if isinstance(rule, Aggregator) else get(rule)
+    return spec(x, f, **kw)
+
+
+__all__ = [
+    "Aggregator", "aggregate", "cwise_median", "default_backend", "dispatch",
+    "get", "markdown_table", "names", "pairwise_sqdists", "register",
+    "registry", "resolve_backend", "rules", "selection_weights",
+    "specs", "subset_diameters", "tree", "tree_agg", "tree_gram",
+]

@@ -1,0 +1,78 @@
+"""Pytree aggregation: apply any registered rule to a stacked pytree.
+
+Leaves carry a leading stack axis ``[n, ...]`` (one entry per sender). The
+rule's ``tree_mode`` capability decides the decomposition — no call site ever
+branches on rule identity:
+
+  * ``"leafwise"``  — coordinate-wise rules apply independently per leaf
+    (exactly equal to the flat rule on the flattened stack);
+  * ``"selection"`` — distance-based rules need *global* distances: the [n,n]
+    distance matrix is assembled from per-leaf partial Grams (no full
+    flatten/copy of the stack), the rule's ``weights_from_d2`` selects once,
+    and leaves are combined with the selection weights.
+
+An optional boolean delivery ``mask`` [n] restricts aggregation to delivered
+senders; it composes with both modes (masked leafwise rules / masked
+selection), so netsim ``TraceDelivery`` quorums work with any mask-capable
+rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import registry, rules
+
+
+def tree_gram(stacked_tree) -> jax.Array:
+    """[n, n] Gram matrix of the flattened stack, from per-leaf partials."""
+    leaves = jax.tree.leaves(stacked_tree)
+    n = leaves[0].shape[0]
+    return sum(jnp.einsum("na,ma->nm", l.reshape(n, -1).astype(jnp.float32),
+                          l.reshape(n, -1).astype(jnp.float32)) for l in leaves)
+
+
+def tree_agg(rule, stacked_tree, f: int = 0, *, mask=None, **kw):
+    """Aggregate a stacked pytree with a registered rule.
+
+    ``rule`` is a registry name or an :class:`~repro.agg.registry.Aggregator`.
+    Extra kwargs are filtered against the rule's declared tunables (e.g.
+    ``exact_limit`` for MDA), so generic call sites can pass a superset.
+    """
+    spec = rule if isinstance(rule, registry.Aggregator) else registry.get(rule)
+    leaves = jax.tree.leaves(stacked_tree)
+    n = leaves[0].shape[0]
+    spec.validate(n, f)
+    if spec.tree_mode == "leafwise":
+        if mask is None:
+            return jax.tree.map(
+                lambda l: spec._call_unmasked(l, f, None, None, **kw),
+                stacked_tree)
+        return jax.tree.map(lambda l: spec(l, f, mask=mask, **kw),
+                            stacked_tree)
+    if spec.tree_mode != "selection":
+        raise ValueError(
+            f"aggregator {spec.name!r} does not support pytree aggregation "
+            f"(tree_mode={spec.tree_mode!r})")
+    d2 = rules.sqdists_from_gram(tree_gram(stacked_tree))
+    w = spec.weights_from_d2(d2, f, mask=mask, **spec.filter_kwargs(**kw))
+    return jax.tree.map(
+        lambda l: jnp.tensordot(w, l.astype(jnp.float32), axes=1).astype(l.dtype),
+        stacked_tree)
+
+
+def selection_weights(rule, d2: jax.Array, f: int = 0, *, mask=None,
+                      **kw) -> jax.Array:
+    """[n,n] distances -> [n] aggregation weights for a selection-based rule.
+
+    The entry point for call sites that already own the distance matrix (the
+    sharded protocol builds it from leaf-partial Grams with a tiny [G,G] psum
+    and averages locally with the returned weights).
+    """
+    spec = rule if isinstance(rule, registry.Aggregator) else registry.get(rule)
+    if not spec.selection_based or spec.weights_from_d2 is None:
+        raise ValueError(f"aggregator {spec.name!r} is not selection-based; "
+                         "selection_weights needs one of "
+                         f"{[s.name for s in registry.specs() if s.selection_based]}")
+    spec.validate(d2.shape[0], f)
+    return spec.weights_from_d2(d2, f, mask=mask, **spec.filter_kwargs(**kw))

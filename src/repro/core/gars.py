@@ -1,319 +1,59 @@
-"""Byzantine-resilient Gradient Aggregation Rules (GARs).
+"""DEPRECATED — ``repro.core.gars`` moved to :mod:`repro.agg`.
 
-All rules operate on a stack ``x`` of shape ``[n, d]`` (n vectors of dimension d)
-with a *static* declared number of Byzantine inputs ``f``. They are pure jnp and
-jit/vmap/grad-compatible. Pytree wrappers live at the bottom.
+This shim keeps the old flat imports (``gars.mda``, ``gars.tree_gar``,
+``gars.pairwise_sqdists``, …) working while every call site migrates to the
+unified Aggregator API::
 
-The paper's rules:
-  * MDA   (Minimum-Diameter Averaging)  — tolerates f Byzantine among n >= 2f+1.
-  * Median (coordinate-wise)            — tolerates f among n >= 2f+1.
-  * MeaMed (mean-around-median)         — used by the synchronous worker gather.
-Baselines the paper compares against / cites:
-  * Krum, Multi-Krum (Blanchard et al. 2017), Bulyan, trimmed mean, plain mean.
+    import repro.agg as agg
+    agg.get("mda")(x, f)                  # was: gars.mda(x, f)
+    agg.tree_agg("mda", tree, f)          # was: gars.tree_gar(gars.mda, ...)
+
+The legacy name->callable registry dict is gone — use ``repro.agg.get`` /
+``repro.agg.names()`` instead.
 """
 from __future__ import annotations
 
-import itertools
-import math
-from functools import partial, lru_cache
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from .. import agg as _agg
+# Legacy flat namespace (unchanged numerics — these are re-exports).
+from ..agg.rules import (_krum_scores, bulyan, coordinate_median, krum,
+                         krum_variance_threshold, masked_coordinate_median,
+                         mda, mda_select_exact, mda_select_greedy,
+                         mda_selection, mda_variance_threshold, meamed, mean,
+                         multi_krum, n_subsets, pairwise_sqdists,
+                         sqdists_from_gram, subset_diameters, subset_masks,
+                         trimmed_mean)
 
-# ---------------------------------------------------------------------------
-# distances
-# ---------------------------------------------------------------------------
+__all__ = [
+    "bulyan", "coordinate_median", "krum", "krum_variance_threshold",
+    "masked_coordinate_median", "mda", "mda_select_exact",
+    "mda_select_greedy", "mda_selection", "mda_variance_threshold", "meamed",
+    "mean", "multi_krum", "n_subsets", "pairwise_sqdists",
+    "sqdists_from_gram", "subset_diameters", "subset_masks", "tree_gar",
+    "trimmed_mean",
+]
 
+warnings.warn("repro.core.gars is deprecated; use repro.agg "
+              "(get/aggregate/tree_agg and the Aggregator registry)",
+              DeprecationWarning, stacklevel=2)
 
-def pairwise_sqdists(x: jax.Array) -> jax.Array:
-    """Exact pairwise squared L2 distances via the Gram matrix. [n,d] -> [n,n].
-
-    The Gram formulation is what makes the *sharded* distributed MDA possible:
-    partial Grams over coordinate shards sum to the full Gram (see protocol.py).
-    """
-    x = x.astype(jnp.float32)
-    sq = jnp.sum(x * x, axis=-1)
-    gram = x @ x.T
-    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
-    return jnp.maximum(d2, 0.0)
-
-
-def sqdists_from_gram(gram: jax.Array) -> jax.Array:
-    """[n,n] Gram -> [n,n] squared distances (used by the sharded protocol)."""
-    sq = jnp.diagonal(gram)
-    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
-
-
-# ---------------------------------------------------------------------------
-# MDA — Minimum-Diameter Averaging (the paper's worker-side GAR)
-# ---------------------------------------------------------------------------
-
-
-@lru_cache(maxsize=None)
-def subset_masks(n: int, f: int) -> np.ndarray:
-    """All C(n, n-f) subsets of size n-f as a static bool mask array [S, n]."""
-    if not 0 <= f < n:
-        raise ValueError(f"need 0 <= f < n, got n={n} f={f}")
-    masks = np.zeros((math.comb(n, n - f), n), dtype=bool)
-    for i, c in enumerate(itertools.combinations(range(n), n - f)):
-        masks[i, list(c)] = True
-    return masks
-
-
-def n_subsets(n: int, f: int) -> int:
-    return math.comb(n, n - f)
-
-
-def subset_diameters(d2: jax.Array, masks: jax.Array) -> jax.Array:
-    """Max in-subset squared distance for each subset mask. [n,n],[S,n] -> [S]."""
-    pair = masks[:, :, None] & masks[:, None, :]  # [S, n, n]
-    return jnp.max(jnp.where(pair, d2[None], -jnp.inf), axis=(1, 2))
-
-
-def mda_select_exact(d2: jax.Array, f: int) -> jax.Array:
-    """Exact minimum-diameter subset selection -> bool mask [n]."""
-    n = d2.shape[0]
-    masks = jnp.asarray(subset_masks(n, f))
-    diam = subset_diameters(d2, masks)
-    return masks[jnp.argmin(diam)]
-
-
-def mda_select_greedy(d2: jax.Array, f: int) -> jax.Array:
-    """Greedy 2-approximation of the min-diameter subset -> bool mask [n].
-
-    Seeds with the closest pair, then repeatedly adds the vector whose inclusion
-    minimises the resulting diameter. O(n^2) selection given the distance matrix.
-    Used when C(n, f) exceeds ``mda_exact_limit`` (e.g. the 32-worker multi-pod
-    mesh). DESIGN.md §2 discusses why Lemma 4.6 still holds up to a factor 2.
-    """
-    n = d2.shape[0]
-    big = jnp.inf
-    d2m = jnp.where(jnp.eye(n, dtype=bool), big, d2)
-    ij = jnp.argmin(d2m)
-    i, j = ij // n, ij % n
-    sel = jnp.zeros((n,), bool).at[i].set(True).at[j].set(True)
-    for _ in range(n - f - 2):
-        # new diameter if k joined = max(current max dist to sel, in-sel diameter)
-        dist_to_sel = jnp.max(jnp.where(sel[None, :], d2, -big), axis=1)  # [n]
-        cand = jnp.where(sel, big, dist_to_sel)
-        k = jnp.argmin(cand)
-        sel = sel.at[k].set(True)
-    return sel
-
-
-def mda(x: jax.Array, f: int, *, exact_limit: int = 200_000,
-        d2: jax.Array | None = None) -> jax.Array:
-    """Minimum-Diameter Averaging. [n,d] -> [d].
-
-    Average of the size-(n-f) subset with minimal L2 diameter (exact when the
-    subset count is tractable, greedy otherwise).
-    """
-    n = x.shape[0]
-    if n < 2 * f + 1:
-        raise ValueError(f"MDA needs n >= 2f+1 (n={n}, f={f})")
-    if f == 0:
-        return jnp.mean(x, axis=0)
-    if d2 is None:
-        d2 = pairwise_sqdists(x)
-    if n_subsets(n, f) <= exact_limit:
-        sel = mda_select_exact(d2, f)
-    else:
-        sel = mda_select_greedy(d2, f)
-    w = sel.astype(x.dtype) / (n - f)
-    return w @ x
-
-
-def mda_selection(d2: jax.Array, f: int, *, exact_limit: int = 200_000) -> jax.Array:
-    """Subset mask only (used by the sharded protocol where averaging is local)."""
-    n = d2.shape[0]
-    if f == 0:
-        return jnp.ones((n,), bool)
-    if n_subsets(n, f) <= exact_limit:
-        return mda_select_exact(d2, f)
-    return mda_select_greedy(d2, f)
-
-
-# ---------------------------------------------------------------------------
-# coordinate-wise rules
-# ---------------------------------------------------------------------------
-
-
-def coordinate_median(x: jax.Array) -> jax.Array:
-    """Coordinate-wise median ("Median" in the paper). [n,d] -> [d]."""
-    return jnp.median(x, axis=0)
-
-
-def masked_coordinate_median(x: jax.Array, delivered: jax.Array) -> jax.Array:
-    """Median over the delivered subset only (asynchrony). [n,d],[n] -> [d].
-
-    Non-delivered entries are pushed to +/-inf in equal numbers so the median of
-    the remaining q values is recovered exactly for any q (sort-based).
-    """
-    q = jnp.sum(delivered)
-    big = jnp.asarray(3.4e38, x.dtype)
-    mask = delivered.reshape((-1,) + (1,) * (x.ndim - 1))
-    xs = jnp.sort(jnp.where(mask, x, big), axis=0)  # delivered entries sort first
-    lo = ((q - 1) // 2).astype(jnp.int32)
-    hi = (q // 2).astype(jnp.int32)
-    return 0.5 * (jnp.take(xs, lo, axis=0) + jnp.take(xs, hi, axis=0))
-
-
-def trimmed_mean(x: jax.Array, f: int) -> jax.Array:
-    """Coordinate-wise trimmed mean: drop f lowest and f highest per coordinate."""
-    n = x.shape[0]
-    if n <= 2 * f:
-        raise ValueError("trimmed_mean needs n > 2f")
-    xs = jnp.sort(x, axis=0)
-    return jnp.mean(xs[f:n - f], axis=0)
-
-
-def meamed(x: jax.Array, f: int) -> jax.Array:
-    """Mean-around-Median (Xie et al. 2018): per coordinate, mean of the n-f
-    values closest to the coordinate median."""
-    n = x.shape[0]
-    med = jnp.median(x, axis=0, keepdims=True)
-    dist = jnp.abs(x - med)
-    idx = jnp.argsort(dist, axis=0)[: n - f]  # [n-f, d]
-    vals = jnp.take_along_axis(x, idx, axis=0)
-    return jnp.mean(vals, axis=0)
-
-
-# ---------------------------------------------------------------------------
-# Krum family (baselines)
-# ---------------------------------------------------------------------------
-
-
-def _krum_scores(d2: jax.Array, f: int) -> jax.Array:
-    """Krum score: sum of the n-f-2 smallest squared distances to neighbours."""
-    n = d2.shape[0]
-    m = n - f - 2
-    if m < 1:
-        raise ValueError(f"Krum needs n >= f+3 (n={n}, f={f})")
-    d2nd = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, d2)
-    srt = jnp.sort(d2nd, axis=1)
-    return jnp.sum(srt[:, :m], axis=1)
-
-
-def krum(x: jax.Array, f: int) -> jax.Array:
-    """Krum (Blanchard et al. 2017): the single vector with the best score."""
-    scores = _krum_scores(pairwise_sqdists(x), f)
-    return x[jnp.argmin(scores)]
-
-
-def multi_krum(x: jax.Array, f: int, m: int | None = None) -> jax.Array:
-    """Multi-Krum: average of the m best-scored vectors (default m = n - f)."""
-    n = x.shape[0]
-    m = n - f if m is None else m
-    scores = _krum_scores(pairwise_sqdists(x), f)
-    idx = jnp.argsort(scores)[:m]
-    return jnp.mean(x[idx], axis=0)
-
-
-def bulyan(x: jax.Array, f: int) -> jax.Array:
-    """Bulyan (El Mhamdi et al. 2018): n-2f rounds of Krum selection, then
-    coordinate-wise trimmed aggregation around the median. Needs n >= 4f+3."""
-    n = x.shape[0]
-    theta = n - 2 * f
-    if theta < 1:
-        raise ValueError(f"Bulyan needs n >= 4f+3 (n={n}, f={f})")
-    d2 = pairwise_sqdists(x)
-    alive = jnp.ones((n,), bool)
-    picks = []
-    for _ in range(theta):
-        d2a = jnp.where(alive[None, :] & alive[:, None] & ~jnp.eye(n, dtype=bool),
-                        d2, jnp.inf)
-        srt = jnp.sort(d2a, axis=1)
-        m = max(n - f - 2, 1)
-        scores = jnp.sum(jnp.where(jnp.isinf(srt[:, :m]), 0.0, srt[:, :m]), axis=1)
-        scores = jnp.where(alive, scores, jnp.inf)
-        k = jnp.argmin(scores)
-        picks.append(x[k])
-        alive = alive.at[k].set(False)
-    sel = jnp.stack(picks)  # [theta, d]
-    beta = theta - 2 * f
-    med = jnp.median(sel, axis=0, keepdims=True)
-    idx = jnp.argsort(jnp.abs(sel - med), axis=0)[:max(beta, 1)]
-    return jnp.mean(jnp.take_along_axis(sel, idx, axis=0), axis=0)
-
-
-def mean(x: jax.Array, f: int = 0) -> jax.Array:  # noqa: ARG001 - uniform signature
-    """Vanilla averaging (not Byzantine resilient — the paper's strawman)."""
-    return jnp.mean(x, axis=0)
-
-
-# ---------------------------------------------------------------------------
-# variance-to-norm bounds (Appendix D / Fig. 7 reproduction)
-# ---------------------------------------------------------------------------
-
-
-def mda_variance_threshold(n: int, f: int) -> float:
-    """Eq. (3)/(7): MDA is safe while stddev/||grad|| <= (n-f) / (2f)."""
-    return float(n - f) / (2.0 * f) if f > 0 else float("inf")
-
-
-def krum_variance_threshold(n: int, f: int) -> float:
-    """Blanchard et al. 2017 condition: eta(n,f) * sigma < ||grad||, i.e. the
-    usable stddev/norm ratio is 1/eta with
-    eta(n,f) = sqrt(2 (n - f + f(n-f-2) + f^2 (n-f-1) / (n-2f-2)))."""
-    if f == 0:
-        return float("inf")
-    if n - 2 * f - 2 <= 0:
-        return 0.0
-    eta2 = 2.0 * (n - f + (f * (n - f - 2) + f * f * (n - f - 1)) / (n - 2 * f - 2))
-    return 1.0 / math.sqrt(eta2)
-
-
-# ---------------------------------------------------------------------------
-# pytree wrappers
-# ---------------------------------------------------------------------------
-
-
-def _stack_leaves(trees):
-    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
-
+# old callable -> registry name, for tree_gar's legacy signature
+_FN_TO_NAME = {
+    mda: "mda",
+    coordinate_median: "median",
+    meamed: "meamed",
+    trimmed_mean: "trimmed_mean",
+    krum: "krum",
+    multi_krum: "multi_krum",
+    bulyan: "bulyan",
+    mean: "mean",
+}
 
 def tree_gar(rule, stacked_tree, f: int, **kw):
-    """Apply a GAR to a pytree whose leaves carry a leading stack axis [n, ...].
-
-    Coordinate-wise rules apply leaf-wise. Distance-based rules (MDA, Krum...)
-    need global distances: we compute the distance matrix from per-leaf partial
-    Grams (no full flatten/copy of the stack), select once, then average
-    leaf-wise with the selection weights.
-    """
-    leaves = jax.tree.leaves(stacked_tree)
-    n = leaves[0].shape[0]
-    if rule in (coordinate_median, meamed, trimmed_mean, mean):
-        if rule is coordinate_median:
-            return jax.tree.map(lambda l: coordinate_median(l), stacked_tree)
-        return jax.tree.map(lambda l: rule(l, f), stacked_tree)
-    # distance-based: global Gram from leaf partials
-    gram = sum(jnp.einsum("na,ma->nm", l.reshape(n, -1).astype(jnp.float32),
-                          l.reshape(n, -1).astype(jnp.float32)) for l in leaves)
-    d2 = sqdists_from_gram(gram)
-    if rule is mda:
-        sel = mda_selection(d2, f, **kw)
-        w = sel.astype(jnp.float32) / (n - f if f else n)
-        return jax.tree.map(
-            lambda l: jnp.tensordot(w, l.astype(jnp.float32), axes=1).astype(l.dtype),
-            stacked_tree)
-    if rule is krum:
-        k = jnp.argmin(_krum_scores(d2, f))
-        return jax.tree.map(lambda l: l[k], stacked_tree)
-    if rule is multi_krum:
-        m = n - f
-        idx = jnp.argsort(_krum_scores(d2, f))[:m]
-        return jax.tree.map(lambda l: jnp.mean(l[idx], axis=0), stacked_tree)
-    raise ValueError(f"unsupported rule {rule}")
-
-
-GAR_REGISTRY = {
-    "mda": mda,
-    "median": coordinate_median,
-    "meamed": meamed,
-    "trimmed_mean": trimmed_mean,
-    "krum": krum,
-    "multi_krum": multi_krum,
-    "bulyan": bulyan,
-    "mean": mean,
-}
+    """Legacy pytree entry point: maps the old callable to its registry name
+    and delegates to :func:`repro.agg.tree_agg`."""
+    name = _FN_TO_NAME.get(rule)
+    if name is None:
+        raise ValueError(f"unsupported rule {rule}")
+    return _agg.tree_agg(name, stacked_tree, f, **kw)

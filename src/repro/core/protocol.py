@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from . import gars
+from .. import agg
 from .attacks import ByzantineSpec, inject_gradients, inject_models
 from .quorum import receiver_quorum_indices
 from ..models.unroll_ctx import map_1 as umap
@@ -61,10 +61,35 @@ class ProtocolConfig:
     pull: str = "median"          # 'median' (async variant) | 'roundrobin'
                                   # (sync variant §5: one model/step via
                                   # collective-permute + distance filter)
+    gar: str = "mda"              # worker-gradient rule (selection-based:
+                                  # aggregation = weights over 'rep')
+    pull_gar: str = "median"      # model rule for the masked pull / DMC
     exchange_dtype: str = "float32"
     mda_exact_limit: int = 200_000
     chunk_bytes: int = 256 * 2**20   # stream leaves bigger than this over dim 1
     byz: ByzantineSpec = field(default_factory=ByzantineSpec)
+
+    def __post_init__(self):
+        # The sharded engine reduces gradients as weighted sums over 'rep',
+        # so the gradient rule must be selection-based (convex weights); the
+        # pull/DMC rule must take traced delivery masks.
+        spec = agg.get(self.gar)
+        if not spec.selection_based:
+            raise ValueError(
+                f"protocol gar={self.gar!r} must be selection-based; have "
+                f"{[s.name for s in agg.specs() if s.selection_based]}")
+        spec.validate(self.q_workers, self.f_workers)
+        # masked_pull applies the rule per leaf chunk, so it must be a
+        # coordinate-wise (leafwise) rule with a traced-mask implementation;
+        # selection rules would pick a different sender subset per leaf.
+        pspec = agg.get(self.pull_gar)
+        if pspec.tree_mode != "leafwise" or pspec.masked_fn is None:
+            ok = [s.name for s in agg.specs()
+                  if s.tree_mode == "leafwise" and s.masked_fn is not None]
+            raise ValueError(f"pull_gar={self.pull_gar!r} must be a "
+                             f"coordinate-wise rule with traced-mask support; "
+                             f"have {ok}")
+        pspec.validate(self.q_servers, self.f_servers)
 
     @staticmethod
     def derive(R: int, divisor: int = 1, *, T: int = 50, engine: str = "sharded",
@@ -325,15 +350,19 @@ def _leaf_stream(fn, chunk_bytes: int, mesh=None):
 # ---------------------------------------------------------------------------
 
 
-def masked_median_pull(params, masks, cfg: ProtocolConfig, mesh=None):
-    """Per-receiver masked coordinate-wise Median over the replica axis.
+def masked_pull(params, masks, cfg: ProtocolConfig, mesh=None):
+    """Per-receiver masked aggregation over the replica axis.
 
     params leaves [G, ...]; masks [G_recv, G_send] bool. Returns leaves
     [G_recv, ...] — worker/server g's aggregated view of the replicas.
+    The rule is ``cfg.pull_gar`` (any registered rule with traced-mask
+    support), the paper's Median by default.
     """
+    spec = agg.get(cfg.pull_gar)
+
     def med_chunk(chunk):  # [G, ...]
         def one(mask):
-            return gars.masked_coordinate_median(chunk.astype(jnp.float32), mask)
+            return spec(chunk.astype(jnp.float32), cfg.f_servers, mask=mask)
         out = jax.vmap(one)(masks).astype(chunk.dtype)
         if mesh is not None:
             out = jax.lax.with_sharding_constraint(
@@ -437,20 +466,20 @@ def tree_gram(grads, mesh=None, chunk_bytes: int = 256 * 2**20) -> jax.Array:
     return total
 
 
-def mda_weights(d2: jax.Array, quorum_idx: jax.Array, f: int,
-                exact_limit: int) -> jax.Array:
-    """Per-server MDA selection weights.
+def quorum_weights(d2: jax.Array, quorum_idx: jax.Array, f: int,
+                   cfg: ProtocolConfig) -> jax.Array:
+    """Per-server selection weights for the configured gradient rule.
 
     d2: [G, G] squared distances; quorum_idx: [G_recv, q] delivered worker
-    indices per server. Returns [G_recv, G_send] averaging weights (rows sum
-    to 1)."""
+    indices per server. Restricts the distance matrix to each delivered
+    quorum, asks the rule's ``weights_from_d2`` for averaging weights (rows
+    sum to 1; one-hot for Krum), and scatters back to [G_recv, G_send]."""
     G = d2.shape[0]
-    q = quorum_idx.shape[1]
 
     def one(idx):
         sub = d2[idx][:, idx]                       # [q, q]
-        sel = gars.mda_selection(sub, f, exact_limit=exact_limit)  # [q] bool
-        w = sel.astype(jnp.float32) / max(q - f, 1)
+        w = agg.selection_weights(cfg.gar, sub, f,
+                                  exact_limit=cfg.mda_exact_limit)
         return jnp.zeros((G,), jnp.float32).at[idx].set(w)
 
     return jax.vmap(one)(quorum_idx)
@@ -563,7 +592,7 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
             pull_idx = receiver_quorum_indices(k_pull, G, G, pcfg.q_servers)
             pull_masks = jnp.zeros((G, G), bool).at[
                 jnp.arange(G)[:, None], pull_idx].set(True)
-            pulled = masked_median_pull(models, pull_masks, pcfg, mesh)
+            pulled = masked_pull(models, pull_masks, pcfg, mesh)
         pulled = jax.tree.map(
             lambda l: l.astype(jnp.dtype(bundle.cfg.act_dtype))
             if l.dtype == jnp.float32 else l, pulled)
@@ -599,17 +628,17 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
         if with_attack and pcfg.byz.worker_attack:
             grads = inject_gradients(grads, pcfg.byz, k_gatk)
 
-        # 3. MDA per server group over its delivered quorum --------------------
+        # 3. gradient rule (MDA by default) per server group over its quorum ---
         push_idx = receiver_quorum_indices(k_push, G, G, pcfg.q_workers)
-        d2 = gars.sqdists_from_gram(tree_gram(grads, mesh))
-        weights = mda_weights(d2, push_idx, pcfg.f_workers, pcfg.mda_exact_limit)
-        agg = aggregate_gradients(grads, weights, pcfg, mesh)
+        d2 = agg.rules.sqdists_from_gram(tree_gram(grads, mesh))
+        weights = quorum_weights(d2, push_idx, pcfg.f_workers, pcfg)
+        g_hat = aggregate_gradients(grads, weights, pcfg, mesh)
 
         # 4. local SGD update (paper Eq. 2) ------------------------------------
         new_params = jax.tree.map(
             lambda p, g: (p.astype(jnp.float32)
                           - eta * g.astype(jnp.float32)).astype(p.dtype),
-            state.params, agg)
+            state.params, g_hat)
         return ByzState(params=new_params, t=state.t + 1, key=key)
 
     return scatter_step
@@ -628,7 +657,7 @@ def make_gather_step(pcfg: ProtocolConfig, with_attack: bool = False,
         models = state.params
         if with_attack and pcfg.byz.server_attack:
             models = inject_models(models, pcfg.byz, k_atk)
-        new_params = masked_median_pull(models, masks, pcfg, mesh)
+        new_params = masked_pull(models, masks, pcfg, mesh)
         new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
                                   new_params, state.params)
         return ByzState(params=new_params, t=state.t, key=key)

@@ -17,7 +17,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import gars
+from .. import agg
 from .attacks import ByzantineSpec, inject_gradients, inject_models
 from .filters import (LipschitzHistory, lipschitz_coefficient, lipschitz_pass,
                       outliers_bound, outliers_pass)
@@ -34,6 +34,9 @@ class ByzSGDConfig:
     q_servers: int | None = None   # models a node waits for (async)
     T: int = 10                 # scatter length (gather every T steps)
     gar: str = "mda"            # worker-gradient GAR at servers
+    pull_gar: str = "median"    # model GAR at workers (async pull)
+    gather_gar: str = "median"  # server-model GAR in the DMC gather
+    worker_gar: str = "meamed"  # worker model refresh in the sync gather
     variant: str = "async"      # "async" | "sync"
     mda_exact_limit: int = 200_000
     lip_horizon: int = 128
@@ -48,6 +51,20 @@ class ByzSGDConfig:
         validate_counts(self.n_workers, self.f_workers, self.n_servers,
                         self.f_servers, qw, qs,
                         synchronous=(self.variant == "sync"))
+        # registry-time GAR validation: names resolve, f bounds hold for the
+        # smallest stack each role ever aggregates, pytree support exists.
+        for role, name, n, f in (("gar", self.gar, qw, self.f_workers),
+                                 ("pull_gar", self.pull_gar, qs,
+                                  self.f_servers),
+                                 ("gather_gar", self.gather_gar, qs,
+                                  self.f_servers),
+                                 ("worker_gar", self.worker_gar,
+                                  self.n_servers, self.f_servers)):
+            spec = agg.get(name)
+            if spec.tree_mode is None:
+                raise ValueError(f"{role}={name!r} does not support pytree "
+                                 "aggregation (tree_mode=None)")
+            spec.validate(n, f)
 
     @property
     def h_servers(self) -> int:
@@ -103,7 +120,7 @@ def l2_diameter(params, h_servers: int) -> jax.Array:
     n = h_servers
     flat = [l[:n].reshape(n, -1).astype(jnp.float32) for l in jax.tree.leaves(params)]
     x = jnp.concatenate(flat, axis=1)
-    return jnp.sqrt(jnp.max(gars.pairwise_sqdists(x)))
+    return jnp.sqrt(jnp.max(agg.pairwise_sqdists(x)))
 
 
 class ByzSGDSimulator:
@@ -163,7 +180,7 @@ class ByzSGDSimulator:
             else:
                 seen = models_seen
             sub = _tree_take(seen, qidx)                 # [q_ps, ...]
-            return gars.tree_gar(gars.coordinate_median, sub, cfg.f_servers)
+            return agg.tree_agg(cfg.pull_gar, sub, cfg.f_servers)
 
         pulled = jax.vmap(pull_one)(jnp.arange(cfg.n_workers), pull_idx)
 
@@ -177,7 +194,6 @@ class ByzSGDSimulator:
 
         # 4. servers aggregate q_w gradients with the GAR and update ---------
         push_idx = self.delivery.push_indices(k_push, state.t)
-        rule = gars.GAR_REGISTRY[cfg.gar]
 
         def server_update(sidx, qidx, p):
             if cfg.byz.equivocates_grads:
@@ -185,12 +201,9 @@ class ByzSGDSimulator:
             else:
                 seen = grads_seen
             sub = _tree_take(seen, qidx)                  # [q_w, ...]
-            if cfg.gar == "mda":
-                agg = gars.tree_gar(gars.mda, sub, cfg.f_workers,
-                                    exact_limit=cfg.mda_exact_limit)
-            else:
-                agg = gars.tree_gar(rule, sub, cfg.f_workers)
-            return tree_sub_scaled(p, agg, eta)
+            g_hat = agg.tree_agg(cfg.gar, sub, cfg.f_workers,
+                                 exact_limit=cfg.mda_exact_limit)
+            return tree_sub_scaled(p, g_hat, eta)
 
         new_params = jax.vmap(server_update)(
             jnp.arange(cfg.n_servers), push_idx, state.params)
@@ -218,7 +231,7 @@ class ByzSGDSimulator:
             else:
                 seen = models_seen
             sub = _tree_take(seen, qidx)
-            return gars.tree_gar(gars.coordinate_median, sub, cfg.f_servers)
+            return agg.tree_agg(cfg.gather_gar, sub, cfg.f_servers)
 
         new_params = jax.vmap(dmc_one)(jnp.arange(cfg.n_servers), gather_idx)
         return state._replace(params=new_params, key=key)
@@ -236,17 +249,13 @@ class ByzSGDSimulator:
         grads_seen = inject_gradients(
             state.w_grad, cfg.byz, k_gatk,
             n_receivers=cfg.n_servers if cfg.byz.equivocates_grads else None)
-        rule = gars.GAR_REGISTRY[cfg.gar]
 
         def server_update(sidx, p):
             seen = (_tree_take(grads_seen, sidx)
                     if cfg.byz.equivocates_grads else grads_seen)
-            if cfg.gar == "mda":
-                agg = gars.tree_gar(gars.mda, seen, cfg.f_workers,
-                                    exact_limit=cfg.mda_exact_limit)
-            else:
-                agg = gars.tree_gar(rule, seen, cfg.f_workers)
-            return tree_sub_scaled(p, agg, eta)
+            g_hat = agg.tree_agg(cfg.gar, seen, cfg.f_workers,
+                                 exact_limit=cfg.mda_exact_limit)
+            return tree_sub_scaled(p, g_hat, eta)
 
         new_params = jax.vmap(server_update)(jnp.arange(cfg.n_servers), state.params)
         models_seen = inject_models(
@@ -316,7 +325,7 @@ class ByzSGDSimulator:
         def refresh(w):
             seen = (_tree_take(models_seen, w)
                     if cfg.byz.equivocates_models else models_seen)
-            return gars.tree_gar(gars.meamed, seen, cfg.f_servers)
+            return agg.tree_agg(cfg.worker_gar, seen, cfg.f_servers)
 
         new_wm = jax.vmap(refresh)(jnp.arange(cfg.n_workers))
         return state._replace(w_model=new_wm, key=key)

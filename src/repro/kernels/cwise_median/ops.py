@@ -1,4 +1,9 @@
-"""Jitted public wrapper around the coordinate-wise median Pallas kernel."""
+"""Jitted wrapper around the coordinate-wise median Pallas kernel.
+
+The Pallas backend of the ``median`` aggregator; call sites reach it through
+``repro.agg`` dispatch (``backend="pallas"`` or auto on TPU), which falls
+back to the jnp reference for stacks larger than the kernel's n <= 64 limit.
+"""
 from __future__ import annotations
 
 from functools import partial

@@ -1,4 +1,11 @@
-"""Jitted wrapper: full Pallas MDA = Gram kernel + diameter-scan kernel."""
+"""Jitted wrapper around the subset-diameter Pallas kernel.
+
+This is the Pallas *backend* for exact MDA selection, reached through
+``repro.agg`` dispatch (``backend="pallas"`` or auto on TPU); the full
+MDA entry point lives in the registry (``repro.agg.get("mda")``), which
+composes the Gram kernel, this diameter scan, and the selection logic of
+``repro.agg.rules``.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,8 +13,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ...core import gars
-from ..pairwise_sqdist.ops import pairwise_sqdists
 from .kernel import diam_pallas_call
 
 _LANE = 128
@@ -37,12 +42,6 @@ def subset_diameters(d2: jax.Array, masks: jax.Array, *, block_s: int = 512,
 
 
 def mda(x: jax.Array, f: int, *, interpret: bool | None = None) -> jax.Array:
-    """Full MDA via the Pallas kernels: [n,d] -> [d]."""
-    n = x.shape[0]
-    if f == 0:
-        return jnp.mean(x, axis=0)
-    d2 = pairwise_sqdists(x, interpret=interpret)
-    masks = jnp.asarray(gars.subset_masks(n, f))
-    diam = subset_diameters(d2, masks, interpret=interpret)
-    sel = masks[jnp.argmin(diam)]
-    return (sel.astype(jnp.float32) @ x.astype(jnp.float32)) / (n - f)
+    """Full MDA on the Pallas backend: [n,d] -> [d] (registry-routed)."""
+    from ... import agg
+    return agg.get("mda")(x, f, backend="pallas", interpret=interpret)

@@ -1,4 +1,9 @@
-"""Jitted public wrapper around the Gram/pairwise-distance Pallas kernel."""
+"""Jitted wrapper around the Gram/pairwise-distance Pallas kernel.
+
+The Pallas backend for every distance-based aggregator (MDA, Krum family);
+call sites reach it through ``repro.agg`` dispatch (``backend="pallas"`` or
+auto on TPU) rather than importing this module directly.
+"""
 from __future__ import annotations
 
 from functools import partial

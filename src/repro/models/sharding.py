@@ -26,7 +26,7 @@ def sharding_rules(rules: dict):
 
 
 def shard(x, name: str):
-    rule = _RULES.get(name)
-    if rule is None:
+    spec = _RULES.get(name)
+    if spec is None:
         return x
-    return jax.lax.with_sharding_constraint(x, rule)
+    return jax.lax.with_sharding_constraint(x, spec)

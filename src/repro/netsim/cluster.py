@@ -60,6 +60,31 @@ class NetsimTrace:
                              push_stale=self.push_stale,
                              gather_stale=self.gather_stale)
 
+    # -- realized quorums as delivery masks --------------------------------
+    # The masked-aggregation form of the trace: [steps, n_recv, n_send] bool,
+    # consumable by any mask-capable rule in the repro.agg registry
+    # (``agg.get(name)(x, f, mask=pull_masks()[k, w])``), not just the Median.
+    @staticmethod
+    def _to_masks(idx: np.ndarray, n_send: int) -> np.ndarray:
+        steps, n_recv, q = idx.shape
+        m = np.zeros((steps, n_recv, n_send), bool)
+        s = np.repeat(np.arange(steps), n_recv * q)
+        r = np.tile(np.repeat(np.arange(n_recv), q), steps)
+        m[s, r, idx.ravel()] = True
+        return m
+
+    def pull_masks(self) -> np.ndarray:
+        """[steps, n_w, n_ps] delivered-server masks per worker."""
+        return self._to_masks(self.pull_idx, self.scenario.n_servers)
+
+    def push_masks(self) -> np.ndarray:
+        """[steps, n_ps, n_w] delivered-worker masks per server."""
+        return self._to_masks(self.push_idx, self.scenario.n_workers)
+
+    def gather_masks(self) -> np.ndarray:
+        """[n_gathers, n_ps, n_ps] delivered-server masks per server."""
+        return self._to_masks(self.gather_idx, self.scenario.n_servers)
+
 
 class _Quorum:
     """Arrival buffer for one (receiver, tag): first q distinct senders."""

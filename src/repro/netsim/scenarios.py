@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 
+import repro.agg as agg
 from repro.core.quorum import validate_counts
 
 from .faults import (CrashPlan, CrashWindow, FaultPlan, LossyLink,
@@ -46,6 +47,11 @@ class Scenario:
     faults: FaultPlan = field(default_factory=FaultPlan)
     seed: int = 0
     max_events: int = 5_000_000
+    # aggregation rule the servers apply to worker gradients when the trace
+    # drives the protocol simulator (any registry name with pytree support;
+    # per-role rules — e.g. MDA-at-servers, arXiv:1911.07537 — ride on the
+    # simulator's pull_gar/gather_gar knobs)
+    gar: str = "mda"
     # Byzantine roles (consumed by the protocol simulator, not the network:
     # netsim only makes these nodes slow/faulty; attacks are injected by
     # repro.core.attacks when the trace drives ByzSGDSimulator)
@@ -62,6 +68,7 @@ class Scenario:
         object.__setattr__(self, "q_servers", qs)
         validate_counts(self.n_workers, self.f_workers, self.n_servers,
                         self.f_servers, qw, qs)
+        agg.get(self.gar).validate(qw, self.f_workers)
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -153,7 +160,8 @@ SCENARIOS = {
 
 def get(name: str, **kw) -> Scenario:
     try:
-        return SCENARIOS[name](**kw)
+        factory = SCENARIOS[name]
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"have {sorted(SCENARIOS)}") from None
+    return factory(**kw)

@@ -1,0 +1,284 @@
+"""Tests for the unified Aggregator API: registry semantics, uniform f
+validation, masked-delivery aggregation, pytree paths, and netsim-trace
+composition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import repro.agg as agg
+
+MASKABLE = [n for n in agg.names() if agg.get(n).supports_masked_delivery]
+TREE_CAPABLE = [n for n in agg.names() if agg.get(n).tree_mode is not None]
+# rules whose traced-mask path is *exactly* the subset rule (mda's traced path
+# is the greedy 2-approximation, documented in repro.agg.rules)
+EXACT_MASKED = [n for n in MASKABLE if n != "mda"]
+
+
+def rand(n, d, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def valid_f(name: str, n: int, f: int) -> bool:
+    k, c = agg.get(name).requires
+    return 0 <= f < n and n >= k * f + c
+
+
+# --------------------------- registry semantics -----------------------------
+
+
+class TestRegistry:
+    def test_lookup_and_names(self):
+        assert "mda" in agg.names()
+        assert agg.get("mda").name == "mda"
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            agg.get("nope")
+
+    def test_uniform_f_validation(self):
+        x = rand(5, 8)
+        with pytest.raises(ValueError, match="mda.*n >= 2f\\+1"):
+            agg.get("mda")(x, 3)
+        with pytest.raises(ValueError, match="f must be >= 0"):
+            agg.get("median")(x, -1)
+        with pytest.raises(ValueError, match="krum.*n >= 2f\\+3"):
+            agg.get("krum")(x, 2)
+        with pytest.raises(ValueError, match="bulyan.*n >= 4f\\+3"):
+            agg.get("bulyan")(x, 1)
+
+    def test_declared_arity_no_f_stub(self):
+        """mean/median take no f — the old `mean(x, f=0)` stub is gone."""
+        x = rand(6, 4)
+        assert not agg.get("mean").takes_f
+        assert not agg.get("median").takes_f
+        with pytest.raises(TypeError):
+            agg.rules.mean(x, 2)
+        np.testing.assert_allclose(agg.get("mean")(x, 2), jnp.mean(x, 0),
+                                   rtol=1e-6)
+
+    def test_aggregate_functional_form(self):
+        x = rand(9, 12)
+        np.testing.assert_allclose(agg.aggregate("mda", x, 2),
+                                   agg.get("mda")(x, 2), rtol=1e-6)
+
+    def test_tunable_filtering(self):
+        x = rand(9, 12)
+        spec = agg.get("mda")
+        # foreign kwargs are dropped, declared ones honored
+        out = agg.tree_agg("median", {"a": x}, 1, exact_limit=10)
+        np.testing.assert_allclose(out["a"], jnp.median(x, 0), rtol=1e-6)
+        got = spec(x, 2, exact_limit=1)   # force greedy
+        sel = agg.rules.mda_select_greedy(agg.rules.pairwise_sqdists(x), 2)
+        np.testing.assert_allclose(got, sel.astype(jnp.float32) @ x / 7,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_markdown_table_covers_registry(self):
+        table = agg.markdown_table()
+        for name in agg.names():
+            assert f"`{name}`" in table
+
+    def test_variance_thresholds_from_spec(self):
+        assert agg.get("mda").variance_threshold(18, 1) == pytest.approx(8.5)
+        assert (agg.get("krum").variance_threshold(18, 1)
+                < agg.get("mda").variance_threshold(18, 1))
+
+    def test_legacy_shim_warns_and_works(self):
+        import importlib
+        import repro.core.gars as gars
+        with pytest.warns(DeprecationWarning):
+            importlib.reload(gars)
+        x = rand(9, 7)
+        np.testing.assert_allclose(gars.mda(x, 2), agg.get("mda")(x, 2),
+                                   rtol=1e-6)
+        # old tree_gar(callable, ...) still routes through the new API
+        got = gars.tree_gar(gars.coordinate_median, {"a": x}, 1)
+        np.testing.assert_allclose(got["a"], jnp.median(x, 0), rtol=1e-6)
+
+
+# --------------------------- masked delivery --------------------------------
+
+
+class TestMaskedDelivery:
+    @pytest.mark.parametrize("name", sorted(agg.names()))
+    def test_concrete_mask_is_subset_rule(self, name):
+        """A concrete mask gives exact delivered-subset semantics: for EVERY
+        registered rule, masked == rule on the gathered subset."""
+        x = rand(11, 13, seed=3)
+        mask = np.array([1, 0, 1, 1, 0, 1, 1, 1, 1, 0, 1], bool)
+        f = 1
+        spec = agg.get(name)
+        got = spec(x, f, mask=mask)
+        want = spec(x[mask], f)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("name", sorted(MASKABLE))
+    def test_traced_full_mask_reproduces_unmasked(self, name):
+        """All-ones traced mask reproduces the unmasked rule (mda: its greedy
+        selection, the documented traced-mask semantics)."""
+        x = rand(9, 17, seed=5)
+        f = 1
+        spec = agg.get(name)
+        got = jax.jit(lambda x, m: spec(x, f, mask=m))(x, jnp.ones(9, bool))
+        if name == "mda":
+            sel = agg.rules.mda_select_greedy(agg.rules.pairwise_sqdists(x), f)
+            want = sel.astype(jnp.float32) @ x / 8
+        else:
+            want = spec(x, f)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("name", sorted(EXACT_MASKED))
+    def test_traced_mask_agrees_with_subset(self, name):
+        """Traced partial masks agree with the rule on the delivered subset
+        (the masked_coordinate_median contract, for every exact masked rule)."""
+        x = rand(10, 9, seed=7)
+        mask_np = np.array([1, 1, 0, 1, 1, 0, 1, 1, 1, 0], bool)
+        f = 1
+        spec = agg.get(name)
+        got = jax.jit(lambda x, m: spec(x, f, mask=m))(x, jnp.asarray(mask_np))
+        want = spec(x[mask_np], f)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_masked_median_is_masked_coordinate_median(self):
+        x = rand(9, 21, seed=11)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 0, 1], bool)
+        np.testing.assert_allclose(
+            agg.get("median")(x, mask=mask),
+            agg.rules.masked_coordinate_median(x, mask), rtol=1e-6)
+
+    def test_traced_mask_requires_capability(self):
+        x = rand(11, 6)
+        with pytest.raises(ValueError, match="no traced-mask"):
+            jax.jit(lambda x, m: agg.get("bulyan")(x, 1, mask=m))(
+                x, jnp.ones(11, bool))
+
+    def test_masked_mda_stays_in_delivered_hull(self):
+        x = rand(9, 8, seed=13)
+        x = x.at[0].set(500.0)       # undelivered outlier must not leak in
+        mask_np = np.array([0, 1, 1, 1, 0, 1, 1, 1, 1], bool)
+        got = jax.jit(lambda x, m: agg.get("mda")(x, 2, mask=m))(
+            x, jnp.asarray(mask_np))
+        sub = x[mask_np]
+        assert bool(jnp.all(got >= jnp.min(sub, 0) - 1e-4))
+        assert bool(jnp.all(got <= jnp.max(sub, 0) + 1e-4))
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(5, 12), f=st.integers(0, 2), seed=st.integers(0, 999),
+           q=st.integers(3, 12))
+    def test_prop_full_mask_identity(self, n, f, seed, q):
+        """Property: a full concrete mask is the identity wrapper for every
+        registered rule at any valid (n, f)."""
+        del q
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, 7))
+        full = np.ones(n, bool)
+        for name in agg.names():
+            if not valid_f(name, n, f):
+                continue
+            spec = agg.get(name)
+            np.testing.assert_allclose(spec(x, f, mask=full), spec(x, f),
+                                       rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(6, 12), q=st.integers(3, 12), d=st.integers(1, 16),
+           seed=st.integers(0, 999))
+    def test_prop_masked_median_subset(self, n, q, d, seed):
+        """Property: masked median == median of the delivered subset."""
+        q = min(q, n)
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (n, d))
+        idx = np.asarray(jax.random.permutation(jax.random.fold_in(key, 1), n))[:q]
+        mask = np.zeros(n, bool)
+        mask[idx] = True
+        got = jax.jit(lambda x, m: agg.get("median")(x, mask=m))(
+            x, jnp.asarray(mask))
+        np.testing.assert_allclose(got, jnp.median(x[mask], axis=0),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# --------------------------- pytree paths -----------------------------------
+
+
+def make_stacked(n, seed=0):
+    trees = []
+    for i in range(n):
+        k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        trees.append({"a": jax.random.normal(k, (3, 4)),
+                      "b": jax.random.normal(jax.random.fold_in(k, 1), (5,))})
+    return (jax.tree.map(lambda *ls: jnp.stack(ls), *trees),
+            jnp.stack([jnp.concatenate([t["a"].ravel(), t["b"]])
+                       for t in trees]))
+
+
+class TestTreeAgg:
+    @pytest.mark.parametrize("name", sorted(set(TREE_CAPABLE) - {"krum"}))
+    def test_tree_equals_flat(self, name):
+        stacked, flat = make_stacked(7)
+        got = agg.tree_agg(name, stacked, 2)
+        want = agg.get(name)(flat, 2)
+        np.testing.assert_allclose(
+            jnp.concatenate([got["a"].ravel(), got["b"]]), want,
+            rtol=1e-4, atol=1e-5)
+
+    def test_tree_krum_picks_same_vector(self):
+        stacked, flat = make_stacked(7)
+        got = agg.tree_agg("krum", stacked, 2)
+        want = agg.rules.krum(flat, 2)
+        np.testing.assert_allclose(
+            jnp.concatenate([got["a"].ravel(), got["b"]]), want,
+            rtol=1e-4, atol=1e-5)
+
+    def test_tree_masked_median(self):
+        stacked, _ = make_stacked(7)
+        mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1], bool)
+        got = jax.jit(lambda s, m: agg.tree_agg("median", s, 1, mask=m))(
+            stacked, mask)
+        np.testing.assert_allclose(
+            got["b"], jnp.median(stacked["b"][np.asarray(mask)], 0),
+            rtol=1e-5, atol=1e-6)
+
+    def test_tree_masked_mda_excludes_undelivered_outlier(self):
+        stacked, _ = make_stacked(9)
+        stacked = jax.tree.map(lambda l: l.at[0].set(300.0), stacked)
+        mask = jnp.asarray([0, 1, 1, 1, 1, 1, 1, 1, 1], bool)
+        got = jax.jit(lambda s, m: agg.tree_agg("mda", s, 2, mask=m))(
+            stacked, mask)
+        assert float(jnp.max(jnp.abs(got["a"]))) < 50.0
+
+    def test_tree_rejects_bulyan(self):
+        stacked, _ = make_stacked(7)
+        with pytest.raises(ValueError, match="pytree"):
+            agg.tree_agg("bulyan", stacked, 1)
+
+    def test_selection_weights_guard(self):
+        d2 = agg.rules.pairwise_sqdists(rand(7, 5))
+        w = agg.selection_weights("mda", d2, 2)
+        assert w.shape == (7,) and float(jnp.sum(w)) == pytest.approx(1.0)
+        with pytest.raises(ValueError, match="not selection-based"):
+            agg.selection_weights("median", d2, 2)
+
+
+# --------------------------- netsim composition -----------------------------
+
+
+class TestNetsimMaskComposition:
+    def test_trace_masks_drive_any_masked_rule(self):
+        """Realized netsim quorums, as masks, compose with every mask-capable
+        rule and agree with index-subset aggregation of the same trace."""
+        from repro.netsim import scenarios
+        from repro.netsim.cluster import ClusterSim
+        sc = scenarios.get("heavy_tail_stragglers", steps=4, seed=2)
+        tr = ClusterSim(sc).run()
+        masks = tr.push_masks()          # [steps, n_ps, n_w]
+        x = rand(sc.n_workers, 15, seed=17)
+        for name in ("median", "meamed", "multi_krum"):
+            spec = agg.get(name)
+            for s in range(sc.n_servers):
+                m = masks[0, s]
+                got = spec(x, 1, mask=m)
+                want = spec(x[m], 1)
+                np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_scenario_gar_is_registry_validated(self):
+        from repro.netsim import scenarios
+        with pytest.raises(KeyError, match="unknown aggregator"):
+            scenarios.get("baseline_uniform", gar="nope")
+        assert scenarios.get("baseline_uniform", gar="krum").gar == "krum"
