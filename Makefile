@@ -2,7 +2,7 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fast netsim agg-bench bench examples
+.PHONY: tier1 fast netsim agg-bench bench examples perf
 
 # full tier-1 gate: everything, stop at first failure
 tier1:
@@ -20,6 +20,13 @@ netsim:
 # aggregator backend timings (jnp vs Pallas per registry rule)
 agg-bench:
 	$(ENV) $(PY) -m benchmarks.run --only agg
+
+# perf lane: fused-engine throughput benchmark, gated (>25% fused steps/sec
+# regression fails) against the committed perf-trajectory baseline (which a
+# run never overwrites; refresh it deliberately with
+# `python -m benchmarks.exp_throughput --seed-baseline`)
+perf:
+	$(ENV) $(PY) -m benchmarks.run --only throughput --compare BENCH_throughput.json
 
 bench:
 	$(ENV) $(PY) -m benchmarks.run

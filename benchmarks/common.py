@@ -14,9 +14,11 @@ import jax.numpy as jnp
 
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
+from repro.core.engine import EpochEngine
 from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
                                   coordinatewise_diameter_sum, l2_diameter)
-from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.data.pipeline import (DeviceBatchStream, MixtureSpec,
+                                 classification_stream)
 from repro.optim.schedules import inverse_linear
 
 DEFAULT_MIX = MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2)
@@ -25,30 +27,70 @@ DEFAULT_MIX = MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2)
 def run_byzsgd(cfg: ByzSGDConfig, *, steps: int, batch: int, seed: int = 0,
                lr0: float = 0.05, decay: float = 0.005,
                mix: MixtureSpec = DEFAULT_MIX, metrics_every: int = 10,
-               track_delta: bool = False, hidden: int = 64):
-    """Train with ByzSGD; returns (logs, final accuracy, wall seconds)."""
+               track_delta: bool = False, hidden: int = 64,
+               stepwise: bool = False):
+    """Train with ByzSGD; returns (logs, final accuracy, wall seconds).
+
+    Runs on the fused epoch engine (repro.core.engine): batches come from the
+    device-side PRNG stream, metrics are accumulated on device, and the host
+    conversion happens ONCE after training (no per-sample float() syncs).
+    ``stepwise=True`` falls back to the per-step reference loop (debugging;
+    equivalence of the two paths is tested in tests/test_engine.py).
+    """
     init, loss, acc = make_mlp_problem(dim=mix.dim, hidden=hidden,
                                        n_classes=mix.n_classes)
     sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(lr0, decay))
     state = sim.init_state(jax.random.PRNGKey(seed))
-    stream, eval_set = classification_stream(seed, mix, cfg.n_workers, batch,
-                                             steps)
-    ex, ey = eval_set(2048)
 
-    def metrics(s):
-        p0 = jax.tree.map(lambda l: l[0], s.params)
-        m = {"acc": float(acc(p0, ex, ey))}
-        if track_delta:
-            m["delta"] = float(coordinatewise_diameter_sum(s.params,
-                                                           cfg.h_servers))
-            m["l2_diam"] = float(l2_diameter(s.params, cfg.h_servers))
-        return m
+    if stepwise:
+        stream, eval_set = classification_stream(seed, mix, cfg.n_workers,
+                                                 batch, steps)
+        ex, ey = eval_set(2048)
 
+        def metrics(s):
+            p0 = jax.tree.map(lambda l: l[0], s.params)
+            m = {"acc": float(acc(p0, ex, ey))}
+            if track_delta:
+                m["delta"] = float(coordinatewise_diameter_sum(s.params,
+                                                               cfg.h_servers))
+                m["l2_diam"] = float(l2_diameter(s.params, cfg.h_servers))
+            return m
+
+        t0 = time.time()
+        state, logs = sim.run(state, stream, metrics_fn=metrics,
+                              metrics_every=metrics_every)
+        wall = time.time() - t0
+        return logs, metrics(state), wall
+
+    stream = DeviceBatchStream(seed, mix, cfg.n_workers, batch)
+    ex, ey = stream.eval_set(2048)
+    eng = EpochEngine(sim, acc_fn=acc, eval_set=(ex, ey),
+                      track_delta=track_delta, metrics_every=metrics_every)
     t0 = time.time()
-    state, logs = sim.run(state, stream, metrics_fn=metrics,
-                          metrics_every=metrics_every)
+    state, mbuf = eng.run(state, stream=stream, steps=steps)
     wall = time.time() - t0
-    final = metrics(state)
+
+    logs = []
+    for i in range(0, steps, metrics_every):
+        m = {"step": i, "acc": float(mbuf["acc"][i])}
+        if track_delta:
+            m["delta"] = float(mbuf["delta"][i])
+            m["l2_diam"] = float(mbuf["l2_diam"][i])
+        if "rejects" in mbuf:
+            m["rejects"] = int(mbuf["rejects"][i].sum())
+        stal = sim.delivery.staleness(i)
+        if stal:
+            m.update(stal)
+        logs.append(m)
+
+    # final metrics on the final state (the last step is off-stride in general)
+    p0 = jax.tree.map(lambda l: l[0], state.params)
+    final = {"acc": float(acc(p0, ex, ey))}
+    if track_delta:
+        final["delta"] = float(mbuf["delta"][-1])
+        final["l2_diam"] = float(mbuf["l2_diam"][-1])
+    if "rejects" in mbuf:
+        final["rejects"] = int(mbuf["rejects"][-1].sum())
     return logs, final, wall
 
 

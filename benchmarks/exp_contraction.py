@@ -14,9 +14,9 @@ import jax.numpy as jnp
 
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
-                                  coordinatewise_diameter_sum)
-from repro.data.pipeline import classification_stream
+from repro.core.engine import EpochEngine
+from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
+from repro.data.pipeline import DeviceBatchStream
 from repro.optim.schedules import inverse_linear
 
 from .common import DEFAULT_MIX
@@ -35,24 +35,20 @@ def run(quick: bool = True):
         init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=64)
         sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
         state = sim.init_state(jax.random.PRNGKey(0))
-        stream, _ = classification_stream(0, DEFAULT_MIX, 9, 25, steps)
-        scatter = jax.jit(sim.scatter_step)
-        gather = jax.jit(sim.gather_step)
+        # fused engine: delta_pre (post-scatter, pre-gather) and delta
+        # (post-gather) come back as on-device per-step buffers — the gather
+        # contraction ratio is computed from ONE host transfer.
+        eng = EpochEngine(sim, track_delta=True)
+        stream = DeviceBatchStream(0, DEFAULT_MIX, 9, 25)
+        state, mbuf = eng.run(state, stream=stream, steps=steps)
         ratios, grew = [], 0
-        deltas = []
-        for i, batch in enumerate(stream):
-            state = scatter(state, batch)
-            d_pre = float(coordinatewise_diameter_sum(state.params,
-                                                      cfg.h_servers))
-            if (i + 1) % T == 0:
-                state = gather(state)
-                d_post = float(coordinatewise_diameter_sum(state.params,
-                                                           cfg.h_servers))
-                if d_pre > 1e-9:
-                    ratios.append(d_post / d_pre)
-                    if d_post > d_pre + 1e-6:
-                        grew += 1
-            deltas.append(d_pre)
+        for i in range(T - 1, steps, T):  # gather fires when (i+1) % T == 0
+            d_pre, d_post = float(mbuf["delta_pre"][i]), float(mbuf["delta"][i])
+            if d_pre > 1e-9:
+                ratios.append(d_post / d_pre)
+                if d_post > d_pre + 1e-6:
+                    grew += 1
+        deltas = [float(v) for v in mbuf["delta_pre"]]
         out[label] = {
             "mean_contraction": float(jnp.mean(jnp.asarray(ratios))),
             "max_contraction": float(jnp.max(jnp.asarray(ratios))),

@@ -12,8 +12,9 @@ import jax
 import repro.agg as agg
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
+from repro.core.engine import EpochEngine
 from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import classification_stream
+from repro.data.pipeline import DeviceBatchStream
 from repro.optim.schedules import inverse_linear
 
 from .common import DEFAULT_MIX
@@ -30,16 +31,13 @@ def _run(byz, steps, T, gar="mda"):
     init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=64, l2=3e-2)
     sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.001))
     state = sim.init_state(jax.random.PRNGKey(0))
-    stream, _ = classification_stream(0, DEFAULT_MIX, 5, 100, steps)
-    sync = jax.jit(sim.sync_step)
-    sync_gather = jax.jit(sim.sync_gather_step)
-    total_rejects = 0
+    # fused sync epochs: per-worker reject counts are carried in the scan and
+    # summed from the on-device metrics buffer (one transfer, no per-step sync)
+    eng = EpochEngine(sim)
+    stream = DeviceBatchStream(0, DEFAULT_MIX, 5, 100)
     byz_is_active = byz.n_byz_servers > 0
-    for i, batch in enumerate(stream):
-        if i > 0 and i % T == 0:
-            state = sync_gather(state)
-        state, diag = sync(state, batch)
-        total_rejects += int(jax.numpy.sum(diag["rejects"]))
+    state, mbuf = eng.run(state, stream=stream, steps=steps)
+    total_rejects = int(mbuf["rejects"].sum())
     pulls = steps * cfg.n_workers
     reject_ratio = total_rejects / pulls
     # without attack every reject is a false negative; with n_byz=1 the first

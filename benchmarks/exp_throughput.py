@@ -1,0 +1,220 @@
+"""Throughput lane: the fused epoch engine vs the per-step ``run()`` loop.
+
+Three lanes per (variant, model size), all training the same default MLP
+problem end-to-end (data pipeline included) for the same number of steps:
+
+  * ``seed_loop`` — the per-step ``run()`` loop driving the *seed* hot path:
+    host batch iterator, one jitted dispatch per step, and the order-statistic
+    rules routed through XLA's generic sort (``use_sort_network(False)``).
+    This is the training loop this PR replaces.
+  * ``stepwise`` — the same per-step ``run()`` loop on today's optimized
+    rules (sorting-network medians, per-instance jit cache). Isolates how
+    much of the win is loop fusion vs step-math optimization.
+  * ``fused`` — :class:`repro.core.engine.EpochEngine` with the device-side
+    batch stream: whole epochs as one donated-buffer ``lax.scan`` dispatch.
+
+Wall-clock is measured with ``block_until_ready`` around interleaved
+best-of-``repeats`` trials (this container's CPU throttles erratically;
+interleaving + best-of keeps the *ratios* meaningful), and compile time is
+reported separately from steady-state steps/sec.
+
+``python -m benchmarks.run --only throughput`` writes
+``results/benchmarks/throughput.json``; ``--compare <baseline.json>`` gates
+on >25% fused steps/sec regression. ``python -m benchmarks.exp_throughput
+--seed-baseline`` refreshes ``BENCH_throughput.json``, the committed perf
+trajectory baseline.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import nullcontext
+
+import jax
+
+from repro.agg.rules import use_sort_network
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.engine import EpochEngine
+from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
+from repro.data.pipeline import DeviceBatchStream, classification_stream
+from repro.optim.schedules import inverse_linear
+
+from .common import DEFAULT_MIX
+
+BATCH = 25
+T = 10
+ACCEPTANCE_KEY = "async/mlp_h64"   # default MLP problem, async, T=10
+ACCEPTANCE_TARGET = 5.0
+
+
+def _build(variant: str, hidden: int):
+    if variant == "sync":
+        cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+                           T=T, variant="sync")
+    else:
+        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
+                           T=T)
+    init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=hidden,
+                                     n_classes=DEFAULT_MIX.n_classes)
+    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
+    return cfg, sim
+
+
+def _stepwise_lane(variant: str, hidden: int, steps: int, seed_path: bool):
+    """Returns (compile_s, trial_fn) for the per-step run() loop."""
+    ctx = use_sort_network(False) if seed_path else nullcontext()
+    with ctx:
+        cfg, sim = _build(variant, hidden)  # fresh sim => fresh traces
+
+        def one_run():
+            state = sim.init_state(jax.random.PRNGKey(0))
+            stream, _ = classification_stream(0, DEFAULT_MIX, cfg.n_workers,
+                                              BATCH, steps)
+            t0 = time.time()
+            state, _ = sim.run(state, stream)
+            jax.block_until_ready(state.params)
+            return steps / (time.time() - t0)
+
+        # first short run compiles all step executables
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream, _ = classification_stream(0, DEFAULT_MIX, cfg.n_workers,
+                                          BATCH, T + 1)
+        t0 = time.time()
+        state, _ = sim.run(state, stream)
+        jax.block_until_ready(state.params)
+        compile_s = time.time() - t0
+
+    def trial():
+        with (use_sort_network(False) if seed_path else nullcontext()):
+            return one_run()
+
+    return compile_s, trial
+
+
+def _fused_lane(variant: str, hidden: int, steps: int, epoch_steps: int):
+    cfg, sim = _build(variant, hidden)
+    eng = EpochEngine(sim)
+
+    def one_run():
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream = DeviceBatchStream(0, DEFAULT_MIX, cfg.n_workers, BATCH)
+        t0 = time.time()
+        state, _ = eng.run(state, stream=stream, steps=steps,
+                           epoch_steps=epoch_steps)
+        jax.block_until_ready(state.params)
+        return steps / (time.time() - t0)
+
+    state = sim.init_state(jax.random.PRNGKey(0))
+    stream = DeviceBatchStream(0, DEFAULT_MIX, cfg.n_workers, BATCH)
+    t0 = time.time()
+    state, _ = eng.run(state, stream=stream, steps=epoch_steps,
+                       epoch_steps=epoch_steps)
+    jax.block_until_ready(state.params)
+    compile_s = time.time() - t0
+    return compile_s, one_run
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 500
+    repeats = 3 if quick else 5
+    epoch_steps = 50  # scan chunk; gather boundary is t-driven, chunk is free
+    configs = [("async", "mlp_h64", 64), ("async", "mlp_h256", 256),
+               ("sync", "mlp_h64", 64)]
+    if not quick:
+        configs += [("async", "mlp_h1024", 1024), ("sync", "mlp_h256", 256)]
+
+    out = {"device": jax.devices()[0].platform, "steps": steps,
+           "batch": BATCH, "T": T, "repeats": repeats,
+           "epoch_steps": epoch_steps, "lanes": {}}
+    for variant, mname, hidden in configs:
+        key = f"{variant}/{mname}"
+        lane_fns, compile_s = {}, {}
+        compile_s["seed_loop"], lane_fns["seed_loop"] = _stepwise_lane(
+            variant, hidden, steps, seed_path=True)
+        compile_s["stepwise"], lane_fns["stepwise"] = _stepwise_lane(
+            variant, hidden, steps, seed_path=False)
+        compile_s["fused"], lane_fns["fused"] = _fused_lane(
+            variant, hidden, steps, epoch_steps)
+        trials = {name: [] for name in lane_fns}
+        for _ in range(repeats):          # interleaved: same machine state
+            for name, fn in lane_fns.items():
+                trials[name].append(fn())
+        entry = {name: {"steps_per_s": max(v), "trials": v,
+                        "compile_s": compile_s[name]}
+                 for name, v in trials.items()}
+        entry["speedup_vs_stepwise"] = (entry["fused"]["steps_per_s"] /
+                                        entry["stepwise"]["steps_per_s"])
+        entry["speedup_vs_seed_loop"] = (entry["fused"]["steps_per_s"] /
+                                         entry["seed_loop"]["steps_per_s"])
+        out["lanes"][key] = entry
+
+    acc = out["lanes"][ACCEPTANCE_KEY]
+    out["acceptance"] = {
+        "config": ACCEPTANCE_KEY,
+        "fused_sps": acc["fused"]["steps_per_s"],
+        "stepwise_sps": acc["stepwise"]["steps_per_s"],
+        "seed_loop_sps": acc["seed_loop"]["steps_per_s"],
+        "speedup_vs_seed_loop": acc["speedup_vs_seed_loop"],
+        "speedup_vs_stepwise": acc["speedup_vs_stepwise"],
+        "target": ACCEPTANCE_TARGET,
+        "pass": acc["speedup_vs_seed_loop"] >= ACCEPTANCE_TARGET,
+    }
+    return out
+
+
+def summarize(res: dict) -> str:
+    lines = [f"[throughput] fused epoch engine vs per-step run() "
+             f"({res['device']}, {res['steps']} steps, batch {res['batch']}, "
+             f"T={res['T']}, best of {res['repeats']}):"]
+    for key, e in res["lanes"].items():
+        lines.append(
+            f"  {key:15s}: seed_loop {e['seed_loop']['steps_per_s']:7.1f}  "
+            f"stepwise {e['stepwise']['steps_per_s']:7.1f}  "
+            f"fused {e['fused']['steps_per_s']:7.1f} steps/s  "
+            f"({e['speedup_vs_seed_loop']:.1f}x vs seed, "
+            f"{e['speedup_vs_stepwise']:.1f}x vs stepwise; "
+            f"compile {e['fused']['compile_s']:.1f}s)")
+    a = res["acceptance"]
+    lines.append(f"  acceptance [{a['config']}]: fused {a['fused_sps']:.1f} "
+                 f"steps/s = {a['speedup_vs_seed_loop']:.1f}x the seed loop "
+                 f"(target >= {a['target']:.0f}x) — "
+                 f"{'PASS' if a['pass'] else 'CHECK'}")
+    return "\n".join(lines)
+
+
+def compare(new: dict, baseline: dict, tol: float = 0.25) -> list[str]:
+    """Regressions of fused steps/sec vs a baseline run. A lane regresses when
+    it is more than ``tol`` slower than the committed number."""
+    problems = []
+    for key, old in baseline.get("lanes", {}).items():
+        cur = new.get("lanes", {}).get(key)
+        if cur is None:
+            problems.append(f"{key}: lane missing from this run")
+            continue
+        old_sps = old["fused"]["steps_per_s"]
+        new_sps = cur["fused"]["steps_per_s"]
+        if new_sps < (1.0 - tol) * old_sps:
+            problems.append(f"{key}: fused {new_sps:.1f} steps/s vs baseline "
+                            f"{old_sps:.1f} (-{100*(1-new_sps/old_sps):.0f}%, "
+                            f"tolerance {100*tol:.0f}%)")
+    return problems
+
+
+def main():
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed-baseline", action="store_true",
+                    help="write BENCH_throughput.json (perf trajectory "
+                    "baseline at the repo root)")
+    args = ap.parse_args()
+    res = run(quick=not args.full)
+    print(summarize(res))
+    if args.seed_baseline:
+        with open("BENCH_throughput.json", "w") as f:
+            json.dump(res, f, indent=1, default=float)
+        print("wrote BENCH_throughput.json")
+
+
+if __name__ == "__main__":
+    main()

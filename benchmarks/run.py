@@ -22,6 +22,7 @@ EXPERIMENTS = [
     ("messages", "exp_messages"),
     ("netsim", "exp_netsim"),
     ("agg", "exp_agg_backends"),
+    ("throughput", "exp_throughput"),
 ]
 
 
@@ -31,18 +32,33 @@ def main():
                     help="paper-scale step counts (slow)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/benchmarks")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="after the throughput experiment, fail (exit 1) on "
+                    "a fused steps/sec regression beyond --compare-tol vs "
+                    "this baseline file")
+    ap.add_argument("--compare-tol", type=float, default=0.25,
+                    help="relative regression tolerance for --compare "
+                    "(default 0.25)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     os.makedirs(args.out, exist_ok=True)
 
+    baseline = None
+    if args.compare:
+        # load before running: the run overwrites results/benchmarks/*.json
+        with open(args.compare) as f:
+            baseline = json.load(f)
+
     import importlib
     t00 = time.time()
+    results = {}
     for name, mod_name in EXPERIMENTS:
         if only and name not in only:
             continue
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
         res = mod.run(quick=not args.full)
+        results[name] = res
         print(mod.summarize(res))
         print(f"  ({time.time()-t0:.1f}s)\n")
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
@@ -59,6 +75,23 @@ def main():
     except Exception as e:  # noqa: BLE001
         print(f"[roofline] unavailable: {e}")
     print(f"\ntotal {time.time()-t00:.1f}s")
+
+    if baseline is not None:
+        if "throughput" not in results:
+            print("[compare] --compare given but the throughput experiment "
+                  "did not run (add --only throughput or drop --only)")
+            raise SystemExit(2)
+        from benchmarks.exp_throughput import compare
+        problems = compare(results["throughput"], baseline,
+                           tol=args.compare_tol)
+        if problems:
+            print("[compare] throughput REGRESSION vs "
+                  f"{args.compare}:")
+            for p in problems:
+                print(f"  {p}")
+            raise SystemExit(1)
+        print(f"[compare] fused throughput within {100*args.compare_tol:.0f}%"
+              f" of {args.compare} — OK")
 
 
 if __name__ == "__main__":

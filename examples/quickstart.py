@@ -10,8 +10,9 @@ import jax
 
 from repro.configs.paper_models import make_mlp_problem
 from repro.core.attacks import ByzantineSpec
+from repro.core.engine import EpochEngine
 from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import MixtureSpec, classification_stream
+from repro.data.pipeline import DeviceBatchStream, MixtureSpec
 from repro.optim.schedules import inverse_linear
 
 
@@ -31,15 +32,15 @@ def main():
     sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
     state = sim.init_state(jax.random.PRNGKey(0))
 
-    stream, eval_set = classification_stream(seed=0, spec=mix,
-                                             n_workers=cfg.n_workers,
-                                             batch_per_worker=25, steps=150)
-    ex, ey = eval_set(2048)
-    state, logs = sim.run(state, stream, metrics_fn=lambda s: {
-        "acc": float(accuracy(jax.tree.map(lambda l: l[0], s.params), ex, ey))},
-        metrics_every=25)
-    for m in logs:
-        print(f"step {m['step']:4d}  accuracy {m['acc']:.3f}")
+    # the fused epoch engine: batches are generated on device, whole T-step
+    # epochs run as one compiled scan, metrics come back as one buffer
+    stream = DeviceBatchStream(seed=0, spec=mix, n_workers=cfg.n_workers,
+                               batch_per_worker=25)
+    ex, ey = stream.eval_set(2048)
+    engine = EpochEngine(sim, acc_fn=accuracy, eval_set=(ex, ey))
+    state, metrics = engine.run(state, stream=stream, steps=150)
+    for i in range(0, 150, 25):
+        print(f"step {i:4d}  accuracy {metrics['acc'][i]:.3f}")
     print("\n2/9 workers ran the ALIE attack the whole time — MDA + "
           "scatter/gather absorbed it.")
 

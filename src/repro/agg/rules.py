@@ -28,6 +28,8 @@ from __future__ import annotations
 
 import itertools
 import math
+import os
+from contextlib import contextmanager
 from functools import lru_cache
 
 import jax
@@ -209,13 +211,95 @@ def mda_weights_from_d2(d2: jax.Array, f: int, *, mask: jax.Array | None = None,
 
 
 # ---------------------------------------------------------------------------
+# small-stack sorting network (hot-path optimization)
+# ---------------------------------------------------------------------------
+
+_NETWORK_MAX_N = 32
+
+# Escape hatch: REPRO_SORT_NETWORK=0 (or use_sort_network(False)) routes the
+# order-statistic rules back through XLA's jnp.sort — bitwise jnp.sort
+# semantics for debugging, and the honest "seed hot path" lane of
+# benchmarks/exp_throughput.py. Flipping it only affects traces compiled
+# afterwards.
+_SORT_NETWORK = os.environ.get("REPRO_SORT_NETWORK", "1") != "0"
+
+
+@contextmanager
+def use_sort_network(on: bool):
+    global _SORT_NETWORK
+    prev, _SORT_NETWORK = _SORT_NETWORK, bool(on)
+    try:
+        yield
+    finally:
+        _SORT_NETWORK = prev
+
+
+@lru_cache(maxsize=None)
+def _oddeven_pairs(n: int) -> tuple[tuple[int, int], ...]:
+    """Batcher odd-even merge-sort compare-exchange schedule for arbitrary n."""
+    pairs = []
+    p = 1
+    while p < n:
+        k = p
+        while k >= 1:
+            for j in range(k % p, n - k, 2 * k):
+                for i in range(min(k, n - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return tuple(pairs)
+
+
+def sort_stack(x: jax.Array) -> jax.Array:
+    """``jnp.sort(x, axis=0)`` for a small static stack, as a compare-exchange
+    network of vectorized min/max pairs.
+
+    XLA lowers a generic sort to a per-coordinate comparator loop on CPU,
+    which costs ~ms for the [n_quorum, d_model] stacks every protocol step
+    sorts (the coordinate-wise Median pull is the single hottest op in the
+    simulator). The Batcher network is pure elementwise min/max over full
+    rows — order-of-magnitude faster on CPU and fusion-friendly inside the
+    scanned epoch (repro.core.engine). Sorted *values* are identical to
+    ``jnp.sort`` (value sorts are tie-insensitive); rules that need argsort
+    keep the XLA sort for its stable tie-breaking. Falls back to ``jnp.sort``
+    beyond n=32 (use the Pallas kernel there).
+    """
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    if n > _NETWORK_MAX_N or not _SORT_NETWORK:
+        return jnp.sort(x, axis=0)
+    # min/max would smear a single NaN across every rank; map NaN to the
+    # finite _BIG sentinel first so Byzantine NaN payloads sort last exactly
+    # like jnp.sort's NaN ordering (and get trimmed/outranked, not returned).
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        x = jnp.where(jnp.isnan(x), jnp.asarray(_BIG, x.dtype), x)
+    rows = list(x)
+    for i, j in _oddeven_pairs(n):
+        a, b = rows[i], rows[j]
+        rows[i] = jnp.minimum(a, b)
+        rows[j] = jnp.maximum(a, b)
+    return jnp.stack(rows, axis=0)
+
+
+def median_stack(x: jax.Array) -> jax.Array:
+    """``jnp.median(x, axis=0)`` via :func:`sort_stack`."""
+    n = x.shape[0]
+    xs = sort_stack(x)
+    if n % 2:
+        return xs[n // 2]
+    return 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+# ---------------------------------------------------------------------------
 # coordinate-wise rules
 # ---------------------------------------------------------------------------
 
 
 def coordinate_median(x: jax.Array) -> jax.Array:
     """Coordinate-wise median ("Median" in the paper). [n,d] -> [d]."""
-    return jnp.median(x, axis=0)
+    return median_stack(x)
 
 
 def masked_coordinate_median(x: jax.Array, delivered: jax.Array) -> jax.Array:
@@ -227,7 +311,7 @@ def masked_coordinate_median(x: jax.Array, delivered: jax.Array) -> jax.Array:
     q = jnp.sum(delivered)
     big = jnp.asarray(3.4e38, x.dtype)
     mask = delivered.reshape((-1,) + (1,) * (x.ndim - 1))
-    xs = jnp.sort(jnp.where(mask, x, big), axis=0)  # delivered entries sort first
+    xs = sort_stack(jnp.where(mask, x, big))  # delivered entries sort first
     lo = ((q - 1) // 2).astype(jnp.int32)
     hi = (q // 2).astype(jnp.int32)
     return 0.5 * (jnp.take(xs, lo, axis=0) + jnp.take(xs, hi, axis=0))
@@ -251,7 +335,7 @@ def trimmed_mean(x: jax.Array, f: int) -> jax.Array:
     n = x.shape[0]
     if n <= 2 * f:
         raise ValueError("trimmed_mean needs n > 2f")
-    xs = jnp.sort(x, axis=0)
+    xs = sort_stack(x)
     return jnp.mean(xs[f:n - f], axis=0)
 
 
@@ -262,7 +346,7 @@ def masked_trimmed_mean(x: jax.Array, f: int, delivered: jax.Array) -> jax.Array
     q = jnp.sum(delivered)
     shape = (-1,) + (1,) * (x.ndim - 1)
     big = jnp.asarray(_BIG, x.dtype)
-    xs = jnp.sort(jnp.where(delivered.reshape(shape), x, big), axis=0)
+    xs = sort_stack(jnp.where(delivered.reshape(shape), x, big))
     rank = jnp.arange(n).reshape(shape)
     keep = (rank >= f) & (rank < q - f)
     num = jnp.sum(jnp.where(keep, xs.astype(jnp.float32), 0.0), axis=0)
@@ -273,7 +357,7 @@ def meamed(x: jax.Array, f: int) -> jax.Array:
     """Mean-around-Median (Xie et al. 2018): per coordinate, mean of the n-f
     values closest to the coordinate median."""
     n = x.shape[0]
-    med = jnp.median(x, axis=0, keepdims=True)
+    med = median_stack(x)[None]
     dist = jnp.abs(x - med)
     idx = jnp.argsort(dist, axis=0)[: n - f]  # [n-f, d]
     vals = jnp.take_along_axis(x, idx, axis=0)

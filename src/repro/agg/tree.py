@@ -44,6 +44,10 @@ def tree_agg(rule, stacked_tree, f: int = 0, *, mask=None, **kw):
     n = leaves[0].shape[0]
     spec.validate(n, f)
     if spec.tree_mode == "leafwise":
+        # Per-leaf application beats flatten-then-apply here: coordinate-wise
+        # rules commute with flattening, but the [n, D] concat/split copies
+        # cost more than the repeated (elementwise, fusion-friendly) op graph,
+        # especially under the simulator's receiver vmap.
         if mask is None:
             return jax.tree.map(
                 lambda l: spec._call_unmasked(l, f, None, None, **kw),

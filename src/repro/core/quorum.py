@@ -22,6 +22,7 @@ from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sample_quorum_mask(key: jax.Array, n: int, q: int,
@@ -136,10 +137,15 @@ class UniformDelivery:
 class TraceDelivery:
     """Replay *realized* quorums from a netsim trace (repro.netsim).
 
-    Steps beyond the trace wrap around (t mod trace length), so a short
-    simulated trace can drive a longer training run. The gather trace is
-    indexed by round r = t/T - 1 — the simulator enters gather after the
-    scatter step that brings the counter to a multiple of T.
+    The quorum tables are staged as stacked device arrays at construction
+    (``[T_total, n_recv, q]`` int32) and indexed by the traced step counter,
+    so the lookups are scan-compatible: a fused ``lax.scan`` epoch (see
+    repro.core.engine) indexes them with the carried ``t`` without any
+    per-step host work. Steps beyond the trace wrap around (t mod trace
+    length) — the graceful fallback when a training run outlives the
+    simulated trace. The gather trace is indexed by round r = t/T - 1 — the
+    simulator enters gather after the scatter step that brings the counter to
+    a multiple of T.
     """
 
     def __init__(self, pull_idx, push_idx, gather_idx, T: int,
@@ -152,12 +158,20 @@ class TraceDelivery:
                              "simulate at least T steps")
         self.T = int(T)
         self.steps = int(self.pull.shape[0])
-        self._pull_stale = None if pull_stale is None else \
-            jnp.asarray(pull_stale, jnp.float32)
-        self._push_stale = None if push_stale is None else \
-            jnp.asarray(push_stale, jnp.float32)
-        self._gather_stale = None if gather_stale is None else \
-            jnp.asarray(gather_stale, jnp.float32)
+        self.n_gathers = int(self.gather.shape[0])
+        # Per-step mean staleness is precomputed ONCE as host arrays: the
+        # metrics loop calls staleness() every logged step and must not
+        # trigger device reductions/transfers there.
+        def _mean_per_step(a):
+            a = np.asarray(a, np.float32)
+            return a.reshape(a.shape[0], -1).mean(axis=1)
+
+        self._pull_stale_ms = None if pull_stale is None else \
+            _mean_per_step(pull_stale)
+        self._push_stale_ms = None if push_stale is None else \
+            _mean_per_step(push_stale)
+        self._gather_stale_ms = None if gather_stale is None else \
+            _mean_per_step(gather_stale)
 
     def pull_indices(self, key, t):
         del key
@@ -173,15 +187,16 @@ class TraceDelivery:
         return self.gather[r % self.gather.shape[0]]
 
     def staleness(self, t):
-        """t: 0-based scatter step just executed (concrete int)."""
-        if self._pull_stale is None:
+        """t: 0-based scatter step just executed (concrete int). Pure host
+        lookup into the precomputed per-step means — no device work."""
+        if self._pull_stale_ms is None:
             return None
         k = int(t) % self.steps
-        out = {"staleness_pull_ms": float(jnp.mean(self._pull_stale[k])),
-               "staleness_push_ms": float(jnp.mean(self._push_stale[k]))}
-        if (int(t) + 1) % self.T == 0 and self._gather_stale is not None:
-            r = ((int(t) + 1) // self.T - 1) % self.gather.shape[0]
-            out["staleness_gather_ms"] = float(jnp.mean(self._gather_stale[r]))
+        out = {"staleness_pull_ms": float(self._pull_stale_ms[k]),
+               "staleness_push_ms": float(self._push_stale_ms[k])}
+        if (int(t) + 1) % self.T == 0 and self._gather_stale_ms is not None:
+            r = ((int(t) + 1) // self.T - 1) % self.n_gathers
+            out["staleness_gather_ms"] = float(self._gather_stale_ms[r])
         return out
 
 

@@ -140,6 +140,17 @@ class ByzSGDSimulator:
         self.lr = lr_schedule
         self.grad_fn = jax.grad(loss_fn)
         self.delivery = delivery or UniformDelivery.from_config(cfg)
+        self._jit_cache: dict[str, Callable] = {}
+
+    def jitted(self, name: str) -> Callable:
+        """Jitted step function, compiled once per simulator instance so
+        repeated ``run()`` calls (parameter sweeps, warm restarts) reuse the
+        executable instead of re-wrapping ``jax.jit`` per call."""
+        fn = self._jit_cache.get(name)
+        if fn is None:
+            fn = jax.jit(getattr(self, name))
+            self._jit_cache[name] = fn
+        return fn
 
     # -- state ------------------------------------------------------------
     def init_state(self, key: jax.Array) -> SimState:
@@ -334,12 +345,19 @@ class ByzSGDSimulator:
     def run(self, state: SimState, batches, *, jit: bool = True,
             metrics_fn: Callable | None = None, metrics_every: int = 10):
         """batches: iterable of [n_w, ...] sharded batches. Returns final state
-        and a list of metric dicts."""
+        and a list of metric dicts.
+
+        This is the *stepwise* reference loop (one dispatch per step, host
+        metrics every ``metrics_every``) — the debugging/correctness oracle.
+        The compiled hot path is :class:`repro.core.engine.EpochEngine`, which
+        fuses whole epochs into one ``lax.scan`` and is equivalence-tested
+        against this loop."""
         cfg = self.cfg
-        scatter = jax.jit(self.scatter_step) if jit else self.scatter_step
-        gather = jax.jit(self.gather_step) if jit else self.gather_step
-        sync = jax.jit(self.sync_step) if jit else self.sync_step
-        sync_gather = jax.jit(self.sync_gather_step) if jit else self.sync_gather_step
+        scatter = self.jitted("scatter_step") if jit else self.scatter_step
+        gather = self.jitted("gather_step") if jit else self.gather_step
+        sync = self.jitted("sync_step") if jit else self.sync_step
+        sync_gather = (self.jitted("sync_gather_step") if jit
+                       else self.sync_gather_step)
         logs = []
         for i, batch in enumerate(batches):
             if cfg.variant == "sync":

@@ -22,6 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 @dataclass(frozen=True)
@@ -68,6 +69,63 @@ def classification_stream(seed: int, spec: MixtureSpec, n_workers: int,
                                            centres, spec, 1, n)
         return x[0], y[0]
     return gen(), eval_set
+
+
+@partial(jax.jit, static_argnames=("spec", "n_workers", "batch_per_worker",
+                                   "length"))
+def sample_classification_epoch(key: jax.Array, centres: jax.Array,
+                                spec: MixtureSpec, n_workers: int,
+                                batch_per_worker: int, length: int):
+    """``length`` stacked batches from one device-side PRNG call.
+
+    Walks the same key chain as :func:`classification_stream` (one split per
+    step), so the produced ``(x [L, n_w, b, dim], y [L, n_w, b])`` tensor is
+    bit-identical to ``length`` host-iterator batches. Returns
+    ``(next_key, (x, y))``.
+    """
+    def split_one(k, _):
+        k, kb = jax.random.split(k)
+        return k, kb
+
+    key, kbs = lax.scan(split_one, key, None, length=length)
+    x, y = jax.vmap(lambda kb: sample_classification_batch(
+        kb, centres, spec, n_workers, batch_per_worker))(kbs)
+    return key, (x, y)
+
+
+class DeviceBatchStream:
+    """Device-resident data stream for the fused epoch engine.
+
+    Unlike :func:`classification_stream` (a host generator dispatching one
+    sampling kernel per step), ``next(L)`` produces the whole epoch's batches
+    as one ``[L, n_w, b, ...]`` device tensor from a single jitted call, so
+    the training hot path stays trace-closed with no host iterator in the
+    loop. Same seed => the concatenation of successive ``next`` calls equals
+    the host stream's batch sequence exactly.
+    """
+
+    def __init__(self, seed: int, spec: MixtureSpec, n_workers: int,
+                 batch_per_worker: int):
+        key = jax.random.PRNGKey(seed)
+        kc, key = jax.random.split(key)
+        self.spec = spec
+        self.n_workers = n_workers
+        self.batch_per_worker = batch_per_worker
+        self.centres = make_mixture(spec, kc)
+        self._key = key
+
+    def next(self, length: int):
+        """Next ``length`` batches: ``(x [L, n_w, b, dim], y [L, n_w, b])``."""
+        self._key, batches = sample_classification_epoch(
+            self._key, self.centres, self.spec, self.n_workers,
+            self.batch_per_worker, length)
+        return batches
+
+    def eval_set(self, n: int = 2048, eval_seed: int = 10_007):
+        """Held-out eval set, identical to ``classification_stream``'s."""
+        x, y = sample_classification_batch(jax.random.PRNGKey(eval_seed),
+                                           self.centres, self.spec, 1, n)
+        return x[0], y[0]
 
 
 def token_stream(seed: int, vocab: int, n_workers: int, batch_per_worker: int,

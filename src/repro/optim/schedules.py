@@ -1,5 +1,10 @@
 """Learning-rate schedules satisfying the paper's conditions (B.1):
-monotone decreasing, sum eta = inf, sum eta^2 < inf."""
+monotone decreasing, sum eta = inf, sum eta^2 < inf.
+
+Every factory stamps a structural ``cache_key`` on the returned closure so
+the epoch engine (repro.core.engine) can share compiled executables between
+sweep points that rebuild the schedule with equal arguments.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -11,6 +16,7 @@ def inverse_sqrt(eta0: float = 0.1, warmup: int = 0, offset: float = 1.0):
         if warmup > 0:
             base = base * jnp.minimum(1.0, (t + 1) / warmup)
         return base
+    lr.cache_key = ("inverse_sqrt", eta0, warmup, offset)
     return lr
 
 
@@ -19,6 +25,7 @@ def inverse_linear(eta0: float = 0.1, decay: float = 0.01):
     # sum eta^2 ~ 1/t converges; sum eta ~ log t diverges. Satisfies B.1.
     def lr(t):
         return eta0 / (1.0 + decay * t)
+    lr.cache_key = ("inverse_linear", eta0, decay)
     return lr
 
 
@@ -27,4 +34,5 @@ def constant(eta0: float = 0.01):
     def lr(t):
         del t
         return jnp.asarray(eta0)
+    lr.cache_key = ("constant", eta0)
     return lr

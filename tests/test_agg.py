@@ -282,3 +282,38 @@ class TestNetsimMaskComposition:
         with pytest.raises(KeyError, match="unknown aggregator"):
             scenarios.get("baseline_uniform", gar="nope")
         assert scenarios.get("baseline_uniform", gar="krum").gar == "krum"
+
+
+class TestSortNetwork:
+    """The Batcher compare-exchange sort behind the order-statistic rules."""
+
+    def test_matches_jnp_sort_all_small_n(self):
+        from repro.agg.rules import sort_stack
+        rng = np.random.default_rng(0)
+        for n in range(1, 33):
+            x = rng.normal(size=(n, 11)).astype(np.float32)
+            np.testing.assert_array_equal(np.asarray(sort_stack(jnp.asarray(x))),
+                                          np.sort(x, axis=0), err_msg=f"n={n}")
+            ties = rng.integers(0, 3, size=(n, 7)).astype(np.float32)
+            np.testing.assert_array_equal(
+                np.asarray(sort_stack(jnp.asarray(ties))),
+                np.sort(ties, axis=0))
+
+    def test_nan_payloads_sort_last_and_get_trimmed(self):
+        """A Byzantine NaN input must not smear through min/max: like
+        jnp.sort, NaNs rank last, so trimmed_mean/median stay finite."""
+        from repro.agg import rules
+        x = jnp.array([[2.0, 1.0], [jnp.nan, 5.0], [1.0, jnp.nan],
+                       [3.0, 2.0], [4.0, 3.0]])
+        assert np.isfinite(np.asarray(rules.trimmed_mean(x, 1))).all()
+        assert np.isfinite(np.asarray(rules.coordinate_median(x))).all()
+        assert np.isfinite(np.asarray(rules.meamed(x, 1))).all()
+
+    def test_toggle_restores_jnp_sort(self):
+        from repro.agg.rules import sort_stack, use_sort_network
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(6, 9)),
+                        jnp.float32)
+        with use_sort_network(False):
+            off = np.asarray(sort_stack(x))
+        np.testing.assert_array_equal(off, np.asarray(jnp.sort(x, axis=0)))
+        np.testing.assert_array_equal(off, np.asarray(sort_stack(x)))

@@ -1,0 +1,275 @@
+"""Fused epoch engine: equivalence with the stepwise reference loop.
+
+The engine (repro.core.engine) must reproduce ``ByzSGDSimulator.run`` exactly:
+same parameters (allclose — XLA may fuse differently inside the scan), same
+metrics at every step, for the async and sync variants, across the gather
+boundary off-by-ones (async gathers when ``(i+1) % T == 0``, sync when
+``i % T == 0`` with ``i > 0``), and with a netsim ``TraceDelivery`` plugged in.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import make_mlp_problem
+from repro.core.engine import (EpochEngine, epoch_cache_size, fn_cache_key,
+                               stack_batches)
+from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
+                                  coordinatewise_diameter_sum)
+from repro.data.pipeline import (DeviceBatchStream, MixtureSpec,
+                                 classification_stream)
+from repro.optim.schedules import inverse_linear
+
+MIX = MixtureSpec(n_classes=5, dim=16, sep=2.5)
+BATCH = 8
+
+
+def make_cfg(variant="async", T=5):
+    if variant == "sync":
+        return ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5,
+                            f_servers=1, T=T, variant="sync")
+    return ByzSGDConfig(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
+                        T=T)
+
+
+def make_sim(cfg, delivery=None):
+    init, loss, acc = make_mlp_problem(dim=MIX.dim, hidden=32,
+                                       n_classes=MIX.n_classes)
+    return ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.01),
+                           delivery=delivery), acc
+
+
+def stepwise_reference(cfg, steps, eval_set, delivery=None, seed=0):
+    """Per-step run() with per-step metrics — the correctness oracle."""
+    sim, acc = make_sim(cfg, delivery)
+    ex, ey = eval_set
+    state = sim.init_state(jax.random.PRNGKey(seed))
+    stream, _ = classification_stream(seed, MIX, cfg.n_workers, BATCH, steps)
+    state, logs = sim.run(state, stream, metrics_fn=lambda s: {
+        "acc": float(acc(jax.tree.map(lambda l: l[0], s.params), ex, ey)),
+        "delta": float(coordinatewise_diameter_sum(s.params, cfg.h_servers))},
+        metrics_every=1)
+    return state, logs
+
+
+def fused(cfg, steps, eval_set, delivery=None, seed=0, epoch_steps=None):
+    sim, acc = make_sim(cfg, delivery)
+    eng = EpochEngine(sim, acc_fn=acc, eval_set=eval_set, track_delta=True)
+    state = sim.init_state(jax.random.PRNGKey(seed))
+    stream = DeviceBatchStream(seed, MIX, cfg.n_workers, BATCH)
+    return eng.run(state, stream=stream, steps=steps, epoch_steps=epoch_steps)
+
+
+def assert_equivalent(cfg, steps, delivery_fn=None, epoch_steps=None):
+    _, eval_set = classification_stream(0, MIX, cfg.n_workers, BATCH, 1)
+    ex, ey = eval_set(256)
+    s_ref, logs = stepwise_reference(
+        cfg, steps, (ex, ey), delivery_fn() if delivery_fn else None)
+    s_fus, mbuf = fused(cfg, steps, (ex, ey),
+                        delivery_fn() if delivery_fn else None,
+                        epoch_steps=epoch_steps)
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(s_fus.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+    assert int(s_fus.t) == steps
+    np.testing.assert_allclose([m["acc"] for m in logs], mbuf["acc"],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose([m["delta"] for m in logs], mbuf["delta"],
+                               rtol=1e-4, atol=1e-5)
+    return logs, mbuf
+
+
+class TestAsyncEquivalence:
+    def test_partial_tail_epoch(self):
+        # 12 = 2 full T=5 epochs (gathers after steps 4 and 9) + 2 tail steps
+        assert_equivalent(make_cfg("async"), steps=12)
+
+    def test_exact_epoch_boundary(self):
+        # gather fires after the LAST step: (i+1) % T == 0 at i = T-1
+        assert_equivalent(make_cfg("async"), steps=5)
+
+    def test_one_step_past_boundary(self):
+        assert_equivalent(make_cfg("async"), steps=6)
+
+    def test_chunking_does_not_change_results(self):
+        # the scan chunk length is free: boundary logic rides on state.t
+        assert_equivalent(make_cfg("async"), steps=12, epoch_steps=7)
+
+
+class TestSyncEquivalence:
+    def test_sync_with_boundary(self):
+        # sync gathers BEFORE steps 5 and 10 (i % T == 0, i > 0), not step 0
+        logs, mbuf = assert_equivalent(make_cfg("sync"), steps=12)
+        assert mbuf["rejects"].shape == (12, 5)
+
+    def test_sync_exact_epoch_no_trailing_gather(self):
+        # steps == T: the i=T gather never runs; engine must match
+        assert_equivalent(make_cfg("sync"), steps=5)
+
+    def test_sync_rejects_match_stepwise(self):
+        cfg = make_cfg("sync")
+        _, eval_set = classification_stream(0, MIX, cfg.n_workers, BATCH, 1)
+        ex, ey = eval_set(256)
+        sim, _ = make_sim(cfg)
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream, _ = classification_stream(0, MIX, cfg.n_workers, BATCH, 8)
+        rej = []
+        for i, b in enumerate(stream):
+            if i > 0 and i % cfg.T == 0:
+                state = sim.jitted("sync_gather_step")(state)
+            state, diag = sim.jitted("sync_step")(state, b)
+            rej.append(np.asarray(diag["rejects"]))
+        _, mbuf = fused(cfg, 8, (ex, ey))
+        np.testing.assert_array_equal(np.stack(rej), mbuf["rejects"])
+
+
+def heavy_tail_delivery():
+    from repro.netsim import ClusterSim, scenarios
+    sc = scenarios.get("heavy_tail_stragglers", n_workers=7, f_workers=2,
+                       n_servers=5, f_servers=1, T=5, steps=10, model_d=1000)
+    return ClusterSim(sc).run().to_delivery()
+
+
+class TestTraceDelivery:
+    def test_fused_equals_stepwise_on_trace(self):
+        assert_equivalent(make_cfg("async"), steps=10,
+                          delivery_fn=heavy_tail_delivery)
+
+    def test_run_past_trace_length_wraps(self):
+        # trace has 10 steps; 14-step run must wrap, not crash, in both paths
+        assert_equivalent(make_cfg("async"), steps=14,
+                          delivery_fn=heavy_tail_delivery)
+
+    def test_staleness_is_host_only_and_stable(self):
+        d = heavy_tail_delivery()
+        s3 = d.staleness(3)
+        assert s3 is not None and s3["staleness_pull_ms"] >= 0.0
+        assert isinstance(s3["staleness_pull_ms"], float)
+        assert d.staleness(3 + d.steps) == s3          # wraps
+        assert "staleness_gather_ms" in d.staleness(4)  # (4+1) % T == 0
+
+
+class TestMetricsStride:
+    def test_strided_acc_matches_dense_on_stride(self):
+        cfg = make_cfg("async")
+        _, eval_set = classification_stream(0, MIX, cfg.n_workers, BATCH, 1)
+        ex, ey = eval_set(256)
+        sim_a, acc = make_sim(cfg)
+        dense_eng = EpochEngine(sim_a, acc_fn=acc, eval_set=(ex, ey))
+        _, dense = dense_eng.run(sim_a.init_state(jax.random.PRNGKey(0)),
+                                 stream=DeviceBatchStream(0, MIX,
+                                                          cfg.n_workers,
+                                                          BATCH), steps=10)
+        sim_b, _ = make_sim(cfg)
+        strided_eng = EpochEngine(sim_b, acc_fn=acc, eval_set=(ex, ey),
+                                  metrics_every=5)
+        _, strided = strided_eng.run(sim_b.init_state(jax.random.PRNGKey(0)),
+                                     stream=DeviceBatchStream(0, MIX,
+                                                              cfg.n_workers,
+                                                              BATCH), steps=10)
+        np.testing.assert_allclose(strided["acc"][::5], dense["acc"][::5],
+                                   rtol=1e-5, atol=1e-6)
+        off = np.delete(strided["acc"], np.s_[::5])
+        np.testing.assert_array_equal(off, np.zeros_like(off))
+
+
+class TestSortNetworkFlag:
+    def test_flag_keys_the_executable(self):
+        from repro.agg.rules import use_sort_network
+        cfg = make_cfg("async")
+        eng_on = EpochEngine(make_sim(cfg)[0])
+        with use_sort_network(False):
+            eng_off = EpochEngine(make_sim(cfg)[0])
+        assert eng_on._epoch is not eng_off._epoch
+
+
+class TestCompileCache:
+    def test_equal_configs_share_executable(self):
+        cfg = make_cfg("async")
+        sim_a, acc = make_sim(cfg)
+        sim_b, _ = make_sim(cfg)   # fresh problem closures, same semantics
+        assert EpochEngine(sim_a)._epoch is EpochEngine(sim_b)._epoch
+
+    def test_different_metrics_flags_do_not_collide(self):
+        cfg = make_cfg("async")
+        sim, acc = make_sim(cfg)
+        n0 = epoch_cache_size()
+        e1 = EpochEngine(sim)
+        e2 = EpochEngine(sim, track_delta=True)
+        assert e1._epoch is not e2._epoch
+        assert epoch_cache_size() >= n0
+
+    def test_schedule_cache_key_structural(self):
+        assert fn_cache_key(inverse_linear(0.05, 0.01)) == \
+            fn_cache_key(inverse_linear(0.05, 0.01))
+        assert fn_cache_key(inverse_linear(0.05, 0.01)) != \
+            fn_cache_key(inverse_linear(0.05, 0.02))
+
+    def test_simulator_run_reuses_jitted_steps(self):
+        cfg = make_cfg("async")
+        sim, _ = make_sim(cfg)
+        state = sim.init_state(jax.random.PRNGKey(0))
+        stream, _ = classification_stream(0, MIX, cfg.n_workers, BATCH, 2)
+        state, _ = sim.run(state, stream)
+        first = sim._jit_cache["scatter_step"]
+        stream, _ = classification_stream(0, MIX, cfg.n_workers, BATCH, 2)
+        state, _ = sim.run(state, stream)
+        assert sim._jit_cache["scatter_step"] is first
+
+
+class TestDeviceStream:
+    def test_matches_host_stream_across_chunks(self):
+        ds = DeviceBatchStream(0, MIX, 7, BATCH)
+        chunks = [ds.next(3), ds.next(5)]
+        dev = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), *chunks)
+        host_iter, _ = classification_stream(0, MIX, 7, BATCH, 8)
+        host = stack_batches(host_iter)
+        for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(dev)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_eval_set_matches_host(self):
+        ds = DeviceBatchStream(0, MIX, 7, BATCH)
+        _, eval_set = classification_stream(0, MIX, 7, BATCH, 1)
+        hx, hy = eval_set(64)
+        dx, dy = ds.eval_set(64)
+        np.testing.assert_array_equal(np.asarray(hx), np.asarray(dx))
+        np.testing.assert_array_equal(np.asarray(hy), np.asarray(dy))
+
+
+class TestEngineAPI:
+    def test_stacked_batches_input(self):
+        cfg = make_cfg("async")
+        sim, _ = make_sim(cfg)
+        stream, _ = classification_stream(0, MIX, cfg.n_workers, BATCH, 7)
+        batches = stack_batches(stream)
+        eng = EpochEngine(sim)
+        state, mbuf = eng.run(sim.init_state(jax.random.PRNGKey(0)), batches)
+        assert int(state.t) == 7 and mbuf == {}
+
+    def test_requires_exactly_one_input(self):
+        cfg = make_cfg("async")
+        sim, _ = make_sim(cfg)
+        eng = EpochEngine(sim)
+        state = sim.init_state(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            eng.run(state)
+        with pytest.raises(ValueError):
+            eng.run(state, batches=(), stream=object())
+
+    def test_acc_fn_requires_eval_set(self):
+        cfg = make_cfg("async")
+        sim, acc = make_sim(cfg)
+        with pytest.raises(ValueError):
+            EpochEngine(sim, acc_fn=acc)
+
+
+class TestThroughputCompare:
+    def test_regression_detected(self):
+        from benchmarks.exp_throughput import compare
+        base = {"lanes": {"async/mlp_h64": {"fused": {"steps_per_s": 100.0}}}}
+        ok = {"lanes": {"async/mlp_h64": {"fused": {"steps_per_s": 80.0}}}}
+        bad = {"lanes": {"async/mlp_h64": {"fused": {"steps_per_s": 60.0}}}}
+        assert compare(ok, base, tol=0.25) == []
+        assert len(compare(bad, base, tol=0.25)) == 1
+        assert len(compare({"lanes": {}}, base, tol=0.25)) == 1
