@@ -2,7 +2,7 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fast netsim agg-bench bench examples perf
+.PHONY: tier1 fast netsim agg-bench bench examples perf exp
 
 # full tier-1 gate: everything, stop at first failure
 tier1:
@@ -27,6 +27,12 @@ agg-bench:
 # `python -m benchmarks.exp_throughput --seed-baseline`)
 perf:
 	$(ENV) $(PY) -m benchmarks.run --only throughput --compare BENCH_throughput.json
+
+# experiment-API smoke lane: one spec through all three runners (stepwise
+# oracle, fused engine, netsim trace), results + provenance under
+# results/benchmarks/exp_smoke_*.json
+exp:
+	$(ENV) $(PY) -m benchmarks.run --exp smoke --runners stepwise,fused,netsim
 
 bench:
 	$(ENV) $(PY) -m benchmarks.run

@@ -1,103 +1,87 @@
 """Shared harness for the paper-claim reproduction experiments.
 
-All experiments run the single-host faithful simulator (repro.core.simulator)
-on the synthetic mixture classification task (data/pipeline.py documents why
-MNIST/CIFAR are substituted). Experiments mirror the paper's figures; each
-module exposes run(quick: bool) -> dict and a textual summary.
+All experiments are :class:`repro.exp.Experiment` specs run through
+``repro.exp.run`` (the synthetic mixture classification task substitutes
+MNIST/CIFAR — data/pipeline.py documents why). Each ``exp_*`` module mirrors
+one paper figure/claim: it exposes ``run(quick: bool) -> dict`` plus a
+textual ``summarize``, and its ``main`` goes through :func:`claim_main` —
+one shared CLI instead of eleven hand-rolled argparse blocks. The
+``--exp``/``--override`` spec-level CLI lives in ``benchmarks/run.py``
+(:func:`parse_overrides` does the value parsing).
 """
 from __future__ import annotations
 
+import argparse
+import ast
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_models import make_mlp_problem
-from repro.core.attacks import ByzantineSpec
-from repro.core.engine import EpochEngine
-from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
-                                  coordinatewise_diameter_sum, l2_diameter)
-from repro.data.pipeline import (DeviceBatchStream, MixtureSpec,
-                                 classification_stream)
+import repro.agg as agg
+import repro.exp as exp
+from repro.data.pipeline import MixtureSpec, classification_stream
 from repro.optim.schedules import inverse_linear
 
-DEFAULT_MIX = MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2)
+#: the benchmark default data spec (kept as a name in the exp DATA registry)
+DEFAULT_MIX: MixtureSpec = exp.DATA["mixture10"]
 
 
-def run_byzsgd(cfg: ByzSGDConfig, *, steps: int, batch: int, seed: int = 0,
-               lr0: float = 0.05, decay: float = 0.005,
-               mix: MixtureSpec = DEFAULT_MIX, metrics_every: int = 10,
-               track_delta: bool = False, hidden: int = 64,
-               stepwise: bool = False):
-    """Train with ByzSGD; returns (logs, final accuracy, wall seconds).
+def run_exp(e: exp.Experiment):
+    """Run a spec; return the legacy (logs, final, wall_s) triple the claim
+    experiments consume."""
+    res = exp.run(e)
+    return res.logs, res.final, res.wall_s
 
-    Runs on the fused epoch engine (repro.core.engine): batches come from the
-    device-side PRNG stream, metrics are accumulated on device, and the host
-    conversion happens ONCE after training (no per-sample float() syncs).
-    ``stepwise=True`` falls back to the per-step reference loop (debugging;
-    equivalence of the two paths is tested in tests/test_engine.py).
-    """
-    init, loss, acc = make_mlp_problem(dim=mix.dim, hidden=hidden,
-                                       n_classes=mix.n_classes)
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(lr0, decay))
-    state = sim.init_state(jax.random.PRNGKey(seed))
 
-    if stepwise:
-        stream, eval_set = classification_stream(seed, mix, cfg.n_workers,
-                                                 batch, steps)
-        ex, ey = eval_set(2048)
+# ---------------------------------------------------------------------------
+# shared CLI
+# ---------------------------------------------------------------------------
 
-        def metrics(s):
-            p0 = jax.tree.map(lambda l: l[0], s.params)
-            m = {"acc": float(acc(p0, ex, ey))}
-            if track_delta:
-                m["delta"] = float(coordinatewise_diameter_sum(s.params,
-                                                               cfg.h_servers))
-                m["l2_diam"] = float(l2_diameter(s.params, cfg.h_servers))
-            return m
 
-        t0 = time.time()
-        state, logs = sim.run(state, stream, metrics_fn=metrics,
-                              metrics_every=metrics_every)
-        wall = time.time() - t0
-        return logs, metrics(state), wall
+def parse_overrides(pairs: list[str]) -> dict:
+    """``key=val`` pairs -> Experiment field overrides. Values parse as
+    Python literals when possible (``steps=50``, ``track_delta=True``,
+    ``scenario='crash_storm'``), else stay strings (``gar=krum``)."""
+    out = {}
+    for pair in pairs or ():
+        key, sep, val = pair.partition("=")
+        if not sep:
+            raise SystemExit(f"--override needs key=val, got {pair!r}")
+        try:
+            out[key] = ast.literal_eval(val)
+        except (ValueError, SyntaxError):
+            out[key] = val
+    return out
 
-    stream = DeviceBatchStream(seed, mix, cfg.n_workers, batch)
-    ex, ey = stream.eval_set(2048)
-    eng = EpochEngine(sim, acc_fn=acc, eval_set=(ex, ey),
-                      track_delta=track_delta, metrics_every=metrics_every)
-    t0 = time.time()
-    state, mbuf = eng.run(state, stream=stream, steps=steps)
-    wall = time.time() - t0
 
-    logs = []
-    for i in range(0, steps, metrics_every):
-        m = {"step": i, "acc": float(mbuf["acc"][i])}
-        if track_delta:
-            m["delta"] = float(mbuf["delta"][i])
-            m["l2_diam"] = float(mbuf["l2_diam"][i])
-        if "rejects" in mbuf:
-            m["rejects"] = int(mbuf["rejects"][i].sum())
-        stal = sim.delivery.staleness(i)
-        if stal:
-            m.update(stal)
-        logs.append(m)
+def claim_main(run_fn, summarize_fn, description: str | None = None,
+               gar_flag: bool = False, argv=None) -> None:
+    """The shared ``python -m benchmarks.exp_*`` entry point: ``--full``
+    everywhere, plus a registry-generated ``--gar`` for the experiments that
+    sweep the worker-gradient rule."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale step counts (slow)")
+    if gar_flag:
+        ap.add_argument("--gar", default="mda",
+                        choices=[n for n in agg.names()
+                                 if agg.get(n).tree_mode is not None])
+    args = ap.parse_args(argv)
+    kw = {"gar": args.gar} if gar_flag else {}
+    print(summarize_fn(run_fn(quick=not args.full, **kw)))
 
-    # final metrics on the final state (the last step is off-stride in general)
-    p0 = jax.tree.map(lambda l: l[0], state.params)
-    final = {"acc": float(acc(p0, ex, ey))}
-    if track_delta:
-        final["delta"] = float(mbuf["delta"][-1])
-        final["l2_diam"] = float(mbuf["l2_diam"][-1])
-    if "rejects" in mbuf:
-        final["rejects"] = int(mbuf["rejects"][-1].sum())
-    return logs, final, wall
+
+# ---------------------------------------------------------------------------
+# the non-ByzSGD baseline (single trusted server — not an Experiment)
+# ---------------------------------------------------------------------------
 
 
 def run_vanilla_sgd(*, steps: int, batch: int, n_workers: int = 9,
                     seed: int = 0, lr0: float = 0.05, decay: float = 0.005,
                     mix: MixtureSpec = DEFAULT_MIX, hidden: int = 64):
     """Paper baseline: single trusted server, plain averaging."""
+    from repro.configs.paper_models import make_mlp_problem
     init, loss, acc = make_mlp_problem(dim=mix.dim, hidden=hidden,
                                        n_classes=mix.n_classes)
     lr = inverse_linear(lr0, decay)

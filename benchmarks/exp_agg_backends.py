@@ -57,6 +57,8 @@ def run(quick: bool = True):
             entry["backends"][backend] = {
                 "ms": ms, "interpret": backend == "pallas" and interpreted}
         results["rules"][name] = entry
+    from repro.exp import provenance
+    results["provenance"] = provenance()
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as fh:
         json.dump(results, fh, indent=1, default=float)
@@ -80,3 +82,8 @@ def summarize(res: dict) -> str:
         lines.append("  note: off-TPU the pallas column is interpret-mode "
                      "(fallback correctness path, not kernel speed)")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from .common import claim_main
+    claim_main(run, summarize, description=__doc__)

@@ -8,9 +8,9 @@ Run with the asynchronous variant (Median pull) and the synchronous variant
 from __future__ import annotations
 
 from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import ByzSGDConfig
+from repro.exp import Experiment
 
-from .common import run_byzsgd
+from .common import claim_main, run_exp
 
 ATTACKS = ["reversed", "partial_drop", "random", "lie"]
 
@@ -20,15 +20,17 @@ def run(quick: bool = True):
     out = {}
     for variant in ("async", "sync"):
         out[variant] = {}
-        base = dict(n_workers=5 if variant == "sync" else 9,
-                    f_workers=1 if variant == "sync" else 2,
-                    n_servers=5, f_servers=1, T=10, variant=variant)
-        _, clean, _ = run_byzsgd(ByzSGDConfig(**base), steps=steps, batch=25)
+        base = Experiment(
+            name=f"byz_servers_{variant}", variant=variant,
+            n_workers=5 if variant == "sync" else 9,
+            f_workers=1 if variant == "sync" else 2,
+            steps=steps, batch=25)
+        _, clean, _ = run_exp(base)
         out[variant]["no_attack"] = clean["acc"]
         for atk in (ATTACKS if not quick else ATTACKS[:4]):
-            cfg = ByzSGDConfig(**base, byz=ByzantineSpec(
-                server_attack=atk, n_byz_servers=1, equivocate=True))
-            _, final, _ = run_byzsgd(cfg, steps=steps, batch=25)
+            byz = ByzantineSpec(server_attack=atk, n_byz_servers=1,
+                                equivocate=True)
+            _, final, _ = run_exp(base.replace(byz=byz))
             out[variant][atk] = final["acc"]
     return out
 
@@ -44,3 +46,7 @@ def summarize(res: dict) -> str:
                      f"{'PASS' if ok else 'CHECK'} (worst {worst:.3f} vs "
                      f"clean {r['no_attack']:.3f})")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    claim_main(run, summarize, description=__doc__)

@@ -8,31 +8,29 @@ larger batches improve robustness (variance bound easier to satisfy).
 from __future__ import annotations
 
 from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import ByzSGDConfig
+from repro.exp import Experiment
 
-from .common import run_byzsgd
+from .common import claim_main, run_exp
+
+
+def _alie(nb: int) -> ByzantineSpec:
+    return ByzantineSpec(worker_attack="alie", n_byz_workers=nb,
+                         equivocate=True)
 
 
 def run(quick: bool = True):
     steps = 120 if quick else 500
-    n_w = 13
+    base = Experiment(name="byz_workers", n_workers=13, f_workers=4,
+                      steps=steps, batch=25)
     out = {"by_fw": {}, "by_batch": {}}
     # 6a: sweep actual Byzantine workers at fixed declared f_w = 4 (max for 13)
     byz_counts = [0, 2, 4] if quick else [0, 1, 2, 3, 4]
     for nb in byz_counts:
-        cfg = ByzSGDConfig(
-            n_workers=n_w, f_workers=4, n_servers=5, f_servers=1, T=10,
-            byz=ByzantineSpec(worker_attack="alie", n_byz_workers=nb,
-                              equivocate=True))
-        _, final, _ = run_byzsgd(cfg, steps=steps, batch=25)
+        _, final, _ = run_exp(base.replace(byz=_alie(nb)))
         out["by_fw"][nb] = final["acc"]
     # 6b: max ratio, sweep batch size
     for b in ([16, 64] if quick else [16, 32, 64, 128, 256]):
-        cfg = ByzSGDConfig(
-            n_workers=n_w, f_workers=4, n_servers=5, f_servers=1, T=10,
-            byz=ByzantineSpec(worker_attack="alie", n_byz_workers=4,
-                              equivocate=True))
-        _, final, _ = run_byzsgd(cfg, steps=steps, batch=b)
+        _, final, _ = run_exp(base.replace(byz=_alie(4), batch=b))
         out["by_batch"][b] = final["acc"]
     return out
 
@@ -47,3 +45,7 @@ def summarize(res: dict) -> str:
     trend = "PASS (larger batch helps)" if accs[-1] >= accs[0] - 0.02 else "CHECK"
     lines.append(f"  paper: bigger batch => more robust — {trend}")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    claim_main(run, summarize, description=__doc__)

@@ -9,17 +9,12 @@ Claims verified empirically:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_models import make_mlp_problem
+import repro.exp as exp
 from repro.core.attacks import ByzantineSpec
-from repro.core.engine import EpochEngine
-from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import DeviceBatchStream
-from repro.optim.schedules import inverse_linear
 
-from .common import DEFAULT_MIX
+from .common import claim_main
 
 
 def run(quick: bool = True):
@@ -30,17 +25,12 @@ def run(quick: bool = True):
                        ("lie_server", ByzantineSpec(server_attack="lie",
                                                     n_byz_servers=1,
                                                     equivocate=True))]:
-        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
-                           T=T, byz=byz)
-        init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=64)
-        sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
-        state = sim.init_state(jax.random.PRNGKey(0))
+        e = exp.Experiment(name=f"contraction_{label}", T=T, steps=steps,
+                           batch=25, track_delta=True, byz=byz)
         # fused engine: delta_pre (post-scatter, pre-gather) and delta
         # (post-gather) come back as on-device per-step buffers — the gather
         # contraction ratio is computed from ONE host transfer.
-        eng = EpochEngine(sim, track_delta=True)
-        stream = DeviceBatchStream(0, DEFAULT_MIX, 9, 25)
-        state, mbuf = eng.run(state, stream=stream, steps=steps)
+        mbuf = exp.run(e).buffers
         ratios, grew = [], 0
         for i in range(T - 1, steps, T):  # gather fires when (i+1) % T == 0
             d_pre, d_post = float(mbuf["delta_pre"][i]), float(mbuf["delta"][i])
@@ -70,3 +60,7 @@ def summarize(res: dict) -> str:
     lines.append("  paper: Median never dilates Delta (4.2) and contracts in "
                  "expectation (4.3)")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    claim_main(run, summarize, description=__doc__)

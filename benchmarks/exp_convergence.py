@@ -7,10 +7,9 @@ report simulator step time + modelled communication bytes — see exp_messages).
 """
 from __future__ import annotations
 
-import repro.agg as agg
-from repro.core.simulator import ByzSGDConfig
+from repro.exp import Experiment
 
-from .common import run_byzsgd, run_vanilla_sgd
+from .common import claim_main, run_exp, run_vanilla_sgd
 
 
 def run(quick: bool = True, gar: str = "mda"):
@@ -19,12 +18,11 @@ def run(quick: bool = True, gar: str = "mda"):
     out = {}
     for b in batches:
         v_logs, v_final, v_wall = run_vanilla_sgd(steps=steps, batch=b)
-        a_cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5,
-                             f_servers=1, T=10, variant="async", gar=gar)
-        a_logs, a_final, a_wall = run_byzsgd(a_cfg, steps=steps, batch=b)
-        s_cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5,
-                             f_servers=1, T=10, variant="sync", gar=gar)
-        s_logs, s_final, s_wall = run_byzsgd(s_cfg, steps=steps, batch=b)
+        a_exp = Experiment(name="convergence_async", variant="async", gar=gar,
+                           steps=steps, batch=b)
+        a_logs, a_final, a_wall = run_exp(a_exp)
+        s_logs, s_final, s_wall = run_exp(
+            a_exp.replace(name="convergence_sync", variant="sync"))
         out[f"b{b}"] = {
             "vanilla": {"final_acc": v_final["acc"], "wall_s": v_wall},
             "byzsgd_async": {"final_acc": a_final["acc"], "wall_s": a_wall},
@@ -50,17 +48,5 @@ def summarize(res: dict) -> str:
     return "\n".join(lines)
 
 
-def main():
-    import argparse
-    ap = argparse.ArgumentParser(description=__doc__)
-    # worker-gradient rule choices come from the registry (pytree-capable)
-    ap.add_argument("--gar", default="mda",
-                    choices=[n for n in agg.names()
-                             if agg.get(n).tree_mode is not None])
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
-    print(summarize(run(quick=not args.full, gar=args.gar)))
-
-
 if __name__ == "__main__":
-    main()
+    claim_main(run, summarize, description=__doc__, gar_flag=True)

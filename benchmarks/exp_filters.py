@@ -7,17 +7,10 @@ keeps rejecting the Byzantine server's payloads); other attacks stay <=3.5%.
 """
 from __future__ import annotations
 
-import jax
-
-import repro.agg as agg
-from repro.configs.paper_models import make_mlp_problem
+import repro.exp as exp
 from repro.core.attacks import ByzantineSpec
-from repro.core.engine import EpochEngine
-from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import DeviceBatchStream
-from repro.optim.schedules import inverse_linear
 
-from .common import DEFAULT_MIX
+from .common import claim_main
 
 
 def _run(byz, steps, T, gar="mda"):
@@ -26,24 +19,21 @@ def _run(byz, steps, T, gar="mda"):
     # (L2 regularisation) + batch 100 so the empirical Lipschitz-coefficient
     # distribution is tight. The quantile level (n_ps-f_ps)/n_ps itself
     # implies an FN floor when the k-distribution is broad.
-    cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
-                       T=T, variant="sync", lip_horizon=32, gar=gar, byz=byz)
-    init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=64, l2=3e-2)
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.001))
-    state = sim.init_state(jax.random.PRNGKey(0))
+    e = exp.Experiment(
+        name="filters", variant="sync", n_workers=5, f_workers=1, T=T,
+        steps=steps, batch=100, gar=gar, lip_horizon=32, l2=3e-2,
+        decay=0.001, byz=byz)
     # fused sync epochs: per-worker reject counts are carried in the scan and
     # summed from the on-device metrics buffer (one transfer, no per-step sync)
-    eng = EpochEngine(sim)
-    stream = DeviceBatchStream(0, DEFAULT_MIX, 5, 100)
-    byz_is_active = byz.n_byz_servers > 0
-    state, mbuf = eng.run(state, stream=stream, steps=steps)
-    total_rejects = int(mbuf["rejects"].sum())
-    pulls = steps * cfg.n_workers
+    res = exp.run(e)
+    total_rejects = int(res.buffers["rejects"].sum())
+    pulls = steps * e.n_workers
     reject_ratio = total_rejects / pulls
     # without attack every reject is a false negative; with n_byz=1 the first
     # 1/n_ps of rejects are true positives (round-robin hits the Byzantine
     # server once per cycle) — report raw ratio plus the TP-adjusted FN rate.
-    expected_tp = (byz.n_byz_servers / cfg.n_servers) if byz_is_active else 0.0
+    expected_tp = (byz.n_byz_servers / e.n_servers) if byz.n_byz_servers \
+        else 0.0
     fn_ratio = max(reject_ratio - expected_tp, 0.0)
     return {"reject_ratio": reject_ratio, "fn_ratio_est": fn_ratio}
 
@@ -77,17 +67,5 @@ def summarize(res: dict) -> str:
     return "\n".join(lines)
 
 
-def main():
-    import argparse
-    ap = argparse.ArgumentParser(description=__doc__)
-    # worker-gradient rule choices come from the registry (pytree-capable)
-    ap.add_argument("--gar", default="mda",
-                    choices=[n for n in agg.names()
-                             if agg.get(n).tree_mode is not None])
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
-    print(summarize(run(quick=not args.full, gar=args.gar)))
-
-
 if __name__ == "__main__":
-    main()
+    claim_main(run, summarize, description=__doc__, gar_flag=True)

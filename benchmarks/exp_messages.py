@@ -62,3 +62,8 @@ def summarize(res: dict) -> str:
     lines.append("  paper: synchrony cuts messages (up to ~70% throughput "
                  "boost, growing with model size)")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from .common import claim_main
+    claim_main(run, summarize, description=__doc__)

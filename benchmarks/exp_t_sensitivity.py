@@ -8,25 +8,23 @@ gathers grows, easier for Byzantine servers to hide).
 from __future__ import annotations
 
 from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import ByzSGDConfig
+from repro.exp import Experiment
 
-from .common import run_byzsgd
+from .common import claim_main, run_exp
 
 
 def run(quick: bool = True):
     steps = 120 if quick else 400
     ts = [1, 10, 40] if quick else [1, 5, 10, 40, 100]
+    reversed_server = ByzantineSpec(server_attack="reversed",
+                                    n_byz_servers=1, equivocate=True)
     out = {"clean": {}, "reversed_server": {}}
     for T in ts:
-        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
-                           T=T)
-        _, final, wall = run_byzsgd(cfg, steps=steps, batch=25)
+        base = Experiment(name=f"t_sensitivity_T{T}", T=T, steps=steps,
+                          batch=25)
+        _, final, wall = run_exp(base)
         out["clean"][T] = {"acc": final["acc"], "wall_s": wall}
-        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
-                           T=T, byz=ByzantineSpec(server_attack="reversed",
-                                                  n_byz_servers=1,
-                                                  equivocate=True))
-        _, final, wall = run_byzsgd(cfg, steps=steps, batch=25)
+        _, final, wall = run_exp(base.replace(byz=reversed_server))
         out["reversed_server"][T] = {"acc": final["acc"], "wall_s": wall}
     return out
 
@@ -41,3 +39,7 @@ def summarize(res: dict) -> str:
     lines.append(f"  paper: T has little effect on per-update convergence in "
                  f"clean runs — {'PASS' if flat else 'CHECK'}")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    claim_main(run, summarize, description=__doc__)

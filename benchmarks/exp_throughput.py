@@ -32,11 +32,9 @@ from contextlib import nullcontext
 import jax
 
 from repro.agg.rules import use_sort_network
-from repro.configs.paper_models import make_mlp_problem
 from repro.core.engine import EpochEngine
-from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
 from repro.data.pipeline import DeviceBatchStream, classification_stream
-from repro.optim.schedules import inverse_linear
+from repro.exp import Experiment
 
 from .common import DEFAULT_MIX
 
@@ -47,16 +45,15 @@ ACCEPTANCE_TARGET = 5.0
 
 
 def _build(variant: str, hidden: int):
-    if variant == "sync":
-        cfg = ByzSGDConfig(n_workers=5, f_workers=1, n_servers=5, f_servers=1,
-                           T=T, variant="sync")
-    else:
-        cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
-                           T=T)
-    init, loss, _ = make_mlp_problem(dim=DEFAULT_MIX.dim, hidden=hidden,
-                                     n_classes=DEFAULT_MIX.n_classes)
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
-    return cfg, sim
+    """Lanes are specs too: the same `Experiment` lowers to the config and
+    simulator each lane drives (the timing loops below stay hand-rolled —
+    they intentionally compare run paths the uniform runner hides)."""
+    e = Experiment(
+        name=f"throughput_{variant}_h{hidden}", variant=variant,
+        n_workers=5 if variant == "sync" else 9,
+        f_workers=1 if variant == "sync" else 2,
+        T=T, batch=BATCH, model=f"mlp_h{hidden}")
+    return e.to_config(), e.build_sim()
 
 
 def _stepwise_lane(variant: str, hidden: int, steps: int, seed_path: bool):
@@ -211,6 +208,8 @@ def main():
     res = run(quick=not args.full)
     print(summarize(res))
     if args.seed_baseline:
+        from repro.exp import provenance
+        res["provenance"] = provenance()
         with open("BENCH_throughput.json", "w") as f:
             json.dump(res, f, indent=1, default=float)
         print("wrote BENCH_throughput.json")

@@ -76,3 +76,8 @@ def summarize(res: dict) -> str:
     lines.append("  paper: MDA's bound is looser than Krum's by orders of "
                  "magnitude — visible above")
     return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from .common import claim_main
+    claim_main(run, summarize, description=__doc__)

@@ -1,8 +1,16 @@
-"""Benchmark entry point: python -m benchmarks.run [--full] [--only name,...]
+"""Benchmark entry point.
 
-One experiment per paper figure/claim (reduced sizes by default; --full runs
-paper-scale step counts), plus the roofline table from the dry-run artifacts
-when present.
+    python -m benchmarks.run [--full] [--only name,...]      # figure lanes
+    python -m benchmarks.run --list                          # what exists
+    python -m benchmarks.run --exp smoke --override steps=30 # any spec
+    python -m benchmarks.run --exp smoke --runners stepwise,fused,netsim
+
+Figure lanes run one experiment per paper figure/claim (reduced sizes by
+default; --full runs paper-scale step counts) plus the roofline table from
+the dry-run artifacts when present. ``--exp`` runs a ``repro.exp`` preset
+(with ``--override key=val`` field overrides) through one or more runners and
+writes each RunResult verbatim. Every result JSON carries a ``provenance``
+block (spec hash, git sha, jax version, device).
 """
 from __future__ import annotations
 
@@ -26,12 +34,56 @@ EXPERIMENTS = [
 ]
 
 
+def _lane_provenance(name: str, full: bool) -> dict:
+    """Provenance for a figure lane: the 'spec' is the lane's (name, scale)
+    pair — hashed the same way Experiment hashes its dict."""
+    import hashlib
+
+    import repro.exp as exp
+    blob = json.dumps({"lane": name, "full": full}, sort_keys=True)
+    return exp.provenance(hashlib.sha256(blob.encode()).hexdigest()[:16])
+
+
+def list_everything() -> str:
+    import repro.exp as exp
+    lines = ["figure lanes (--only name,...):"]
+    for name, mod in EXPERIMENTS:
+        lines.append(f"  {name:15s} -> benchmarks/{mod}.py")
+    lines.append("\nexperiment presets (--exp NAME, override with "
+                 "--override key=val):\n")
+    lines.append(exp.markdown_table())
+    return "\n".join(lines)
+
+
+def run_preset(args) -> None:
+    import repro.exp as exp
+    from benchmarks.common import parse_overrides
+    overrides = parse_overrides(args.override)
+    runners = (args.runners.split(",") if args.runners
+               else [exp.get(args.exp, **overrides).runner])
+    for runner in runners:
+        res = exp.run(args.exp, **{**overrides, "runner": runner})
+        print(res.summary())
+        path = exp.write_result(res, out_dir=args.out)
+        print(f"  -> {path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale step counts (slow)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/benchmarks")
+    ap.add_argument("--list", action="store_true",
+                    help="print figure lanes + registered experiment presets")
+    ap.add_argument("--exp", default=None, metavar="PRESET",
+                    help="run one repro.exp preset instead of figure lanes")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VAL",
+                    help="Experiment field override (repeatable)")
+    ap.add_argument("--runners", default=None,
+                    help="comma list for --exp (e.g. stepwise,fused,netsim); "
+                    "default: the preset's declared runner")
     ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
                     help="after the throughput experiment, fail (exit 1) on "
                     "a fused steps/sec regression beyond --compare-tol vs "
@@ -40,6 +92,15 @@ def main():
                     help="relative regression tolerance for --compare "
                     "(default 0.25)")
     args = ap.parse_args()
+
+    if args.list:
+        print(list_everything())
+        return
+    if args.exp:
+        os.makedirs(args.out, exist_ok=True)
+        run_preset(args)
+        return
+
     only = set(args.only.split(",")) if args.only else None
     os.makedirs(args.out, exist_ok=True)
 
@@ -61,6 +122,7 @@ def main():
         results[name] = res
         print(mod.summarize(res))
         print(f"  ({time.time()-t0:.1f}s)\n")
+        res["provenance"] = _lane_provenance(name, args.full)
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump(res, f, indent=1, default=float)
 

@@ -1,36 +1,24 @@
 """Attack gallery: what breaks vanilla averaging, and what ByzSGD absorbs.
 
-For each attack we train twice — once with the non-resilient `mean` rule (the
-classical parameter-server baseline) and once with a resilient rule from the
-repro.agg registry (MDA by default; pick any with --gar) — and print final
-accuracies side by side.
+For each attack we run the same Experiment spec twice — once with the
+non-resilient `mean` rule (the classical parameter-server baseline) and once
+with a resilient rule from the repro.agg registry (MDA by default; pick any
+with --gar) — and print final accuracies side by side.
 
     PYTHONPATH=src python examples/byzantine_attacks.py [--gar krum]
 """
 import argparse
 
-import jax
-
 import repro.agg as agg
-from repro.configs.paper_models import make_mlp_problem
+import repro.exp as exp
 from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import MixtureSpec, classification_stream
-from repro.optim.schedules import inverse_linear
 
-MIX = MixtureSpec(n_classes=10, dim=32)
+BASE = exp.Experiment(name="attack_gallery", data="mixture10_easy",
+                      steps=120, batch=25)
 
 
-def train(gar: str, byz: ByzantineSpec, steps: int = 120) -> float:
-    init, loss, accuracy = make_mlp_problem(dim=32, hidden=64)
-    cfg = ByzSGDConfig(n_workers=9, f_workers=2, n_servers=5, f_servers=1,
-                       T=10, gar=gar, byz=byz)
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
-    state = sim.init_state(jax.random.PRNGKey(0))
-    stream, eval_set = classification_stream(0, MIX, 9, 25, steps)
-    ex, ey = eval_set(2048)
-    state, _ = sim.run(state, stream)
-    return float(accuracy(jax.tree.map(lambda l: l[0], state.params), ex, ey))
+def train(gar: str, byz: ByzantineSpec) -> float:
+    return exp.run(BASE.replace(gar=gar, byz=byz)).final["acc"]
 
 
 def main():

@@ -1,5 +1,6 @@
 """Scenario lab walkthrough: simulate a cluster, inspect its accounting, and
-train ByzSGD over the *realized* delivery schedule.
+train ByzSGD over the *realized* delivery schedule — all through the
+``netsim/*`` experiment presets (one spec = scenario + threat model + runner).
 
   PYTHONPATH=src python examples/netsim_scenarios.py                 # all
   PYTHONPATH=src python examples/netsim_scenarios.py --scenario crash_storm
@@ -8,70 +9,39 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
-from repro.configs.paper_models import make_mlp_problem
-from repro.core.attacks import ByzantineSpec
-from repro.core.simulator import (ByzSGDConfig, ByzSGDSimulator,
-                                  coordinatewise_diameter_sum)
-from repro.data.pipeline import MixtureSpec, classification_stream
-from repro.netsim import ClusterSim, scenarios
-from repro.optim.schedules import inverse_linear
-
-MIX = MixtureSpec(n_classes=5, dim=16, sep=2.5)
-
-
-def train_on_trace(sc, trace, steps: int):
-    """ByzSGD on the small MLP problem, quorums replayed from the trace.
-    Byzantine roles declared by the scenario are injected here (the network
-    made those nodes slow; the attack makes them malicious too)."""
-    byz = ByzantineSpec(worker_attack=sc.worker_attack,
-                        server_attack=sc.server_attack,
-                        n_byz_workers=sc.n_byz_workers,
-                        n_byz_servers=sc.n_byz_servers,
-                        equivocate=bool(sc.worker_attack or sc.server_attack))
-    cfg = ByzSGDConfig(n_workers=sc.n_workers, f_workers=sc.f_workers,
-                       n_servers=sc.n_servers, f_servers=sc.f_servers,
-                       T=sc.T, gar=sc.gar, byz=byz)
-    init, loss, acc = make_mlp_problem(dim=MIX.dim, hidden=32,
-                                       n_classes=MIX.n_classes)
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.01),
-                          delivery=trace.to_delivery())
-    state = sim.init_state(jax.random.PRNGKey(0))
-    stream, eval_set = classification_stream(0, MIX, sc.n_workers, 16, steps)
-    ex, ey = eval_set(512)
-    state, logs = sim.run(state, stream, metrics_fn=lambda s: {
-        "acc": float(acc(jax.tree.map(lambda l: l[0], s.params), ex, ey)),
-        "delta": float(coordinatewise_diameter_sum(s.params, cfg.h_servers)),
-    }, metrics_every=max(steps // 4, 1))
-    return logs
+import repro.exp as exp
 
 
 def main(argv=None):
+    netsim_presets = sorted(n for n in exp.names() if n.startswith("netsim/"))
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
-                    help=f"one of {sorted(scenarios.SCENARIOS)} or 'all'")
+                    help=f"one of {[n.split('/', 1)[1] for n in netsim_presets]} "
+                    "or 'all'")
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    names = sorted(scenarios.SCENARIOS) if args.scenario == "all" \
-        else [args.scenario]
+    names = netsim_presets if args.scenario == "all" \
+        else [f"netsim/{args.scenario}"]
     for name in names:
-        sc = scenarios.get(name, steps=args.steps, seed=args.seed,
-                           n_workers=7, model_d=1000)
-        trace = ClusterSim(sc).run()
-        print(trace.ledger.summary(sc))
-        print(f"  virtual time {trace.step_done_ms[-1]:.1f}ms  "
-              f"events {trace.events}  shortfalls {trace.shortfalls}  "
-              f"mean pull staleness {trace.pull_stale.mean():.2f}ms")
-        logs = train_on_trace(sc, trace, args.steps)
-        for m in logs:
+        # shrink the cluster + payload so the walkthrough stays snappy; every
+        # field override re-validates the spec (paper Table 1 preconditions)
+        e = exp.get(name, steps=args.steps, seed=args.seed, n_workers=7,
+                    model_d=1000, metrics_every=max(args.steps // 4, 1))
+        res = exp.run(e)
+        print(res.netsim["summary"])
+        print(f"  virtual time {res.netsim['virtual_ms']:.1f}ms  "
+              f"events {res.netsim['events']}  "
+              f"shortfalls {res.netsim['shortfalls']}  "
+              f"mean pull staleness "
+              f"{res.netsim['mean_pull_staleness_ms']:.2f}ms")
+        for m in res.logs:
             extra = "".join(f"  {k} {v:7.2f}" for k, v in m.items()
                             if k.startswith("staleness"))
-            print(f"  step {m['step']:3d}  acc {m['acc']:.3f}  "
-                  f"diameter {m['delta']:8.3f}{extra}")
-        print()
+            print(f"  step {m['step']:3d}  acc {m['acc']:.3f}{extra}")
+        print(f"  final acc {res.final['acc']:.3f}  "
+              f"(spec {e.spec_hash})\n")
 
 
 if __name__ == "__main__":

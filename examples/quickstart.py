@@ -1,48 +1,27 @@
-"""Quickstart: Byzantine-resilient training in ~30 lines.
+"""Quickstart: Byzantine-resilient training in a few lines.
 
-Runs ByzSGD (the paper's asynchronous variant) on a synthetic classification
-task with 9 workers / 5 servers, 2 of the workers mounting the ALIE attack —
-and converges anyway.
+Runs the "quickstart" experiment preset — ByzSGD (the paper's asynchronous
+variant) on a synthetic classification task with 9 workers / 5 servers, 2 of
+the workers mounting the ALIE attack — and converges anyway. The preset is a
+plain serializable spec; print ``e.to_dict()`` (or edit it) to see every knob.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
-from repro.configs.paper_models import make_mlp_problem
-from repro.core.attacks import ByzantineSpec
-from repro.core.engine import EpochEngine
-from repro.core.simulator import ByzSGDConfig, ByzSGDSimulator
-from repro.data.pipeline import DeviceBatchStream, MixtureSpec
-from repro.optim.schedules import inverse_linear
+import repro.exp as exp
 
 
 def main():
-    mix = MixtureSpec(n_classes=10, dim=32)
-    init, loss, accuracy = make_mlp_problem(dim=32, hidden=64)
+    e = exp.get("quickstart")          # a frozen, serializable Experiment
+    print(f"spec {e.spec_hash}: {e.n_workers} workers "
+          f"({e.byz.n_byz_workers} Byzantine, {e.byz.worker_attack}), "
+          f"{e.n_servers} servers, gar={e.gar}, runner={e.runner}\n")
 
-    cfg = ByzSGDConfig(
-        n_workers=9, f_workers=2,      # n_w >= 3 f_w + 1
-        n_servers=5, f_servers=1,      # n_ps >= 3 f_ps + 2
-        T=10,                          # DMC gather every T steps
-        gar="mda",                     # Minimum-Diameter Averaging — any
-                                       # repro.agg registry rule works here
-        byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2,
-                          equivocate=True),
-    )
-    sim = ByzSGDSimulator(cfg, init, loss, inverse_linear(0.05, 0.005))
-    state = sim.init_state(jax.random.PRNGKey(0))
-
-    # the fused epoch engine: batches are generated on device, whole T-step
-    # epochs run as one compiled scan, metrics come back as one buffer
-    stream = DeviceBatchStream(seed=0, spec=mix, n_workers=cfg.n_workers,
-                               batch_per_worker=25)
-    ex, ey = stream.eval_set(2048)
-    engine = EpochEngine(sim, acc_fn=accuracy, eval_set=(ex, ey))
-    state, metrics = engine.run(state, stream=stream, steps=150)
-    for i in range(0, 150, 25):
-        print(f"step {i:4d}  accuracy {metrics['acc'][i]:.3f}")
-    print("\n2/9 workers ran the ALIE attack the whole time — MDA + "
-          "scatter/gather absorbed it.")
+    res = exp.run(e)                   # fused epoch engine under the hood
+    for m in res.logs[::3]:
+        print(f"step {m['step']:4d}  accuracy {m['acc']:.3f}")
+    print(f"final accuracy {res.final['acc']:.3f}  ({res.wall_s:.1f}s)")
+    print(f"\n{e.byz.n_byz_workers}/{e.n_workers} workers ran the ALIE "
+          "attack the whole time — MDA + scatter/gather absorbed it.")
 
 
 if __name__ == "__main__":

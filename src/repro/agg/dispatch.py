@@ -99,6 +99,39 @@ def median(x: jax.Array, *, backend: str | None = None,
     return cwise_median(x, backend=backend, interpret=interpret).astype(x.dtype)
 
 
+def _cwise_rule(x: jax.Array, f: int, kernel_name: str, ref_fn,
+                backend: str | None, interpret: bool | None) -> jax.Array:
+    """Shared dispatch for the f-taking coordinate-wise order-statistic
+    rules: the Pallas path shares cwise_median's sorting network; multi-dim
+    leaves and stacks beyond the kernel's n limit fall back to the jnp
+    reference."""
+    ok = x.ndim == 2 and x.shape[0] <= _MEDIAN_KERNEL_MAX_N
+    if resolve_backend(backend, pallas_ok=ok) == "pallas":
+        from ..kernels.cwise_median import ops
+        out = getattr(ops, kernel_name)(x, f, interpret=interpret)
+        return out.astype(x.dtype)
+    return ref_fn(x, f)
+
+
+def trimmed_mean(x: jax.Array, f: int, *, backend: str | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """Coordinate-wise trimmed mean through the backend dispatch."""
+    return _cwise_rule(x, f, "cwise_trimmed_mean", rules.trimmed_mean,
+                       backend, interpret)
+
+
+def meamed(x: jax.Array, f: int, *, backend: str | None = None,
+           interpret: bool | None = None) -> jax.Array:
+    """Mean-around-Median through the backend dispatch.
+
+    Backend equivalence is exact except when two values are *exactly*
+    equidistant from the median on opposite sides (probability zero on
+    continuous data): both backends then select sets with identical distance
+    profiles (same max, same sum — see the kernel's tie contract) but may
+    average a different member of the tied pair."""
+    return _cwise_rule(x, f, "cwise_meamed", rules.meamed, backend, interpret)
+
+
 def mda(x: jax.Array, f: int, *, exact_limit: int = 200_000,
         backend: str | None = None,
         interpret: bool | None = None) -> jax.Array:

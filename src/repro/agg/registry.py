@@ -165,15 +165,17 @@ register(Aggregator(
     masked_fn=rules.masked_coordinate_median))
 
 register(Aggregator(
-    name="meamed", fn=rules.meamed, takes_f=True,
+    name="meamed", fn=dispatch.meamed, takes_f=True,
     breakdown="n >= 2f+1", requires=(2, 1),
     doc="mean-around-median (sync worker gather rule)",
+    backends=("jnp", "pallas"),
     masked_fn=rules.masked_meamed))
 
 register(Aggregator(
-    name="trimmed_mean", fn=rules.trimmed_mean, takes_f=True,
+    name="trimmed_mean", fn=dispatch.trimmed_mean, takes_f=True,
     breakdown="n >= 2f+1", requires=(2, 1),
     doc="coordinate-wise trimmed mean (baseline)",
+    backends=("jnp", "pallas"),
     masked_fn=rules.masked_trimmed_mean))
 
 register(Aggregator(

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..agg import dispatch as _agg_dispatch
 from ..agg import rules as _agg_rules
 from .quorum import UniformDelivery
 from .simulator import (ByzSGDSimulator, SimState, _tree_take,
@@ -181,10 +182,12 @@ class EpochEngine:
         self._epoch = self._get_or_build()
 
     def _flags(self):
-        # _SORT_NETWORK changes the compiled trace of every order-statistic
-        # rule, so it must key the executable too
+        # _SORT_NETWORK and the process-default agg backend change the
+        # compiled trace of every order-statistic rule, so they must key the
+        # executable too (repro.exp.run toggles both per experiment)
         return (fn_cache_key(self.acc_fn), self.track_delta, self.track_gnorm,
-                self.metrics_every, _agg_rules._SORT_NETWORK)
+                self.metrics_every, _agg_rules._SORT_NETWORK,
+                _agg_dispatch.default_backend())
 
     def _cache_key(self):
         return ("epoch", self.cfg,

@@ -1,0 +1,35 @@
+"""repro.exp — the declarative Experiment API.
+
+One serializable spec, one ``run()``, every runner::
+
+    import repro.exp as exp
+
+    res = exp.run("quickstart")                    # named preset
+    res = exp.run("smoke", runner="netsim")        # preset + overrides
+    e = exp.Experiment(gar="krum", steps=60)       # or build a spec
+    res = exp.run(e.replace(runner="stepwise"))    # oracle loop
+    exp.Experiment.from_dict(e.to_dict()) == e     # exact round trip
+    e.spec_hash                                    # stable content hash
+
+An :class:`Experiment` names everything a run needs — cluster shape, threat
+model, delivery model, per-role GARs, model/data/schedule registry refs,
+runner, backend knobs — and lowers to the internal carriers (``ByzSGDConfig``,
+netsim ``Scenario``) with round-trip cross-validation. :func:`run` returns a
+uniform :class:`RunResult` (metrics + provenance) for the stepwise oracle,
+the fused epoch engine, and netsim trace-driven runs alike.
+
+``python -m repro.exp`` prints the preset table (the README section);
+``python -m benchmarks.run --exp NAME --override key=val`` runs any preset.
+"""
+from __future__ import annotations
+
+from . import presets, runners, spec  # noqa: F401
+from .presets import get, markdown_table, names, register
+from .runners import RunResult, git_sha, provenance, run, write_result
+from .spec import DATA, MODELS, SCHEDULES, Experiment
+
+__all__ = [
+    "DATA", "Experiment", "MODELS", "RunResult", "SCHEDULES", "get",
+    "git_sha", "markdown_table", "names", "presets", "provenance",
+    "register", "run", "runners", "spec", "write_result",
+]

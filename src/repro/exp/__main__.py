@@ -1,0 +1,8 @@
+"""Print the registry-derived experiment preset table (the README section).
+
+    PYTHONPATH=src python -m repro.exp
+"""
+from .presets import markdown_table
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,129 @@
+"""Named experiment presets — the registry :func:`repro.exp.run` resolves.
+
+A preset is a frozen :class:`~repro.exp.spec.Experiment`; :func:`get` applies
+field overrides with ``dataclasses.replace`` (re-validating), so every CLI
+(``benchmarks/run.py --exp NAME --override key=val``) and test shrinks or
+scales presets without bespoke wiring.
+
+The ``netsim/*`` presets mirror — and subsume — the ``repro.netsim.scenarios``
+factories: each names its scenario and the matching threat model, with
+``runner="netsim"`` so :func:`repro.exp.run` simulates the cluster and trains
+over the realized trace. ``python -m repro.exp`` prints the table below for
+the README.
+"""
+from __future__ import annotations
+
+from ..core.attacks import ByzantineSpec
+from .spec import Experiment
+
+_PRESETS: dict[str, Experiment] = {}
+
+
+def register(exp: Experiment, *, replace: bool = False) -> Experiment:
+    """Register a preset under ``exp.name`` (third parties included)."""
+    if exp.name in _PRESETS and not replace:
+        raise ValueError(f"experiment preset {exp.name!r} already registered")
+    _PRESETS[exp.name] = exp
+    return exp
+
+
+def get(name: str, **overrides) -> Experiment:
+    """Preset by name, with field overrides applied (and re-validated)."""
+    try:
+        base = _PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown experiment preset {name!r}; "
+                       f"have {sorted(_PRESETS)}") from None
+    return base.replace(**overrides) if overrides else base
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_PRESETS))
+
+
+def specs() -> tuple[Experiment, ...]:
+    return tuple(_PRESETS[n] for n in names())
+
+
+# ---------------------------------------------------------------------------
+# built-in presets
+# ---------------------------------------------------------------------------
+
+# the CI/`make exp` smoke spec: small enough to run through every runner in
+# seconds, shaped to exercise a gather boundary and a tail (steps % T != 0)
+register(Experiment(
+    name="smoke", n_workers=7, f_workers=2, n_servers=5, f_servers=1, T=5,
+    steps=12, batch=8, model="mlp_h32", data="mixture5_small",
+    scenario="baseline_uniform", metrics_every=5, eval_n=256))
+
+# clean baselines (Fig. 3): async and sync ByzSGD without adversaries
+register(Experiment(name="clean_async", variant="async", steps=120))
+register(Experiment(name="clean_sync", variant="sync", n_workers=5,
+                    f_workers=1, steps=120))
+
+# the quickstart: 2/9 workers mounting ALIE, converges anyway (§6 headline)
+register(Experiment(
+    name="quickstart", data="mixture10_easy",
+    byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2,
+                      equivocate=True)))
+
+# Fig. 6 operating point: max declared f_w, all of it actually Byzantine
+register(Experiment(
+    name="alie_workers", n_workers=13, f_workers=4, steps=120,
+    byz=ByzantineSpec(worker_attack="alie", n_byz_workers=4,
+                      equivocate=True)))
+
+# Fig. 5 operating points: one Byzantine server
+register(Experiment(
+    name="lie_server", steps=120, track_delta=True,
+    byz=ByzantineSpec(server_attack="lie", n_byz_servers=1,
+                      equivocate=True)))
+register(Experiment(
+    name="reversed_server", steps=120, track_delta=True,
+    byz=ByzantineSpec(server_attack="reversed", n_byz_servers=1,
+                      equivocate=True)))
+
+# sync filter variant under a Byzantine server (Fig. 10 operating point)
+register(Experiment(
+    name="sync_filters", variant="sync", n_workers=5, f_workers=1, T=20,
+    steps=100, batch=100, lip_horizon=32, l2=3e-2, decay=0.001,
+    byz=ByzantineSpec(server_attack="reversed", n_byz_servers=1,
+                      equivocate=True)))
+
+# netsim presets: one per scenario factory, trained over the realized trace
+_NETSIM_COMMON = dict(
+    runner="netsim", T=5, steps=30, batch=16, model="mlp_h32",
+    data="mixture5_small", metrics_every=10, eval_n=512)
+for _scen in ("baseline_uniform", "heavy_tail_stragglers", "partitioned_dmc",
+              "crash_storm"):
+    register(Experiment(name=f"netsim/{_scen}", scenario=_scen,
+                        **_NETSIM_COMMON))
+# the compound adversary: netsim makes the Byzantine workers slow, the
+# simulator's injection makes them malicious (mirrors the factory's defaults)
+register(Experiment(
+    name="netsim/byzantine_plus_slow", scenario="byzantine_plus_slow",
+    byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2, equivocate=True),
+    **_NETSIM_COMMON))
+
+
+# ---------------------------------------------------------------------------
+# registry-derived documentation (README preset table)
+# ---------------------------------------------------------------------------
+
+
+def markdown_table() -> str:
+    """README preset table (``python -m repro.exp`` regenerates it)."""
+    head = ("| preset | runner | variant | cluster (n_w/f_w, n_ps/f_ps, T) | "
+            "gar | attack | steps |")
+    out = [head, "|---|---|---|---|---|---|---|"]
+    for e in specs():
+        atk = "—"
+        if e.byz.worker_attack:
+            atk = f"{e.byz.worker_attack} ×{e.byz.n_byz_workers} (workers)"
+        elif e.byz.server_attack:
+            atk = f"{e.byz.server_attack} ×{e.byz.n_byz_servers} (servers)"
+        out.append(
+            f"| `{e.name}` | {e.runner} | {e.variant} | "
+            f"{e.n_workers}/{e.f_workers}, {e.n_servers}/{e.f_servers}, "
+            f"T={e.T} | `{e.gar}` | {atk} | {e.steps} |")
+    return "\n".join(out)

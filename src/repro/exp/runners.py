@@ -1,0 +1,231 @@
+"""``repro.exp.run`` — one entry point, every runner.
+
+Dispatches an :class:`~repro.exp.spec.Experiment` to
+
+  * ``stepwise`` — the per-step ``ByzSGDSimulator.run`` reference loop (the
+    debugging/correctness oracle; host batch iterator, host metrics),
+  * ``fused``    — the compiled :class:`repro.core.engine.EpochEngine` hot
+    path (device batch stream, donated ``lax.scan`` epochs, one host
+    transfer),
+  * ``netsim``   — a trace-driven run: the named netsim scenario is simulated
+    first, the realized quorums/staleness replay through ``TraceDelivery``,
+    and the cluster's accounting rides along in the result,
+
+and returns a uniform :class:`RunResult`: strided metric ``logs``, ``final``
+metrics, wall seconds, and a ``provenance`` block (spec hash + git sha +
+jax/device info) that ``benchmarks/run.py`` writes verbatim into
+``results/benchmarks/*.json``. The three runners train the *same* experiment:
+stepwise and fused are equivalence-tested (params allclose) in
+``tests/test_exp.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..agg import default_backend
+from ..agg.rules import use_sort_network
+from ..core.engine import EpochEngine
+from ..core.simulator import coordinatewise_diameter_sum, l2_diameter
+from ..data.pipeline import DeviceBatchStream, classification_stream
+from . import presets
+from .spec import Experiment
+
+
+def git_sha() -> str | None:
+    """Current repo revision, or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance(spec_hash: str | None = None) -> dict[str, Any]:
+    """The provenance block every result JSON carries."""
+    dev = jax.devices()[0]
+    return {"spec_hash": spec_hash, "git_sha": git_sha(),
+            "jax_version": jax.__version__, "device": dev.platform,
+            "device_kind": getattr(dev, "device_kind", None),
+            "agg_backend": default_backend()}
+
+
+@dataclass
+class RunResult:
+    """Uniform result of :func:`run` across the three runners.
+
+    ``logs``/``final``/``wall_s``/``provenance``/``netsim`` serialize via
+    :meth:`to_dict`; ``state`` (the final ``SimState``) and ``buffers`` (the
+    dense per-step device metric buffers, host numpy) are runtime attachments
+    for tests and notebook analysis, never written to JSON.
+    """
+    experiment: Experiment
+    logs: list[dict]
+    final: dict
+    wall_s: float
+    provenance: dict
+    netsim: dict | None = None
+    state: Any = field(default=None, repr=False, compare=False)
+    buffers: dict | None = field(default=None, repr=False, compare=False)
+
+    def to_dict(self) -> dict[str, Any]:
+        out = {"experiment": self.experiment.to_dict(),
+               "logs": self.logs, "final": self.final, "wall_s": self.wall_s,
+               "provenance": self.provenance}
+        if self.netsim is not None:
+            out["netsim"] = self.netsim
+        return out
+
+    def summary(self) -> str:
+        e = self.experiment
+        bits = [f"[{e.name}] runner={e.runner}", f"steps={e.steps}",
+                f"final acc {self.final.get('acc', float('nan')):.3f}",
+                f"wall {self.wall_s:.1f}s", f"spec {e.spec_hash}"]
+        if self.netsim is not None:
+            bits.append(f"virtual {self.netsim['virtual_ms']:.0f}ms "
+                        f"(shortfalls {self.netsim['shortfalls']})")
+        return "  ".join(bits)
+
+
+def run(experiment: Experiment | str, **overrides) -> RunResult:
+    """Run an experiment (or a preset name) through its declared runner."""
+    if isinstance(experiment, str):
+        e = presets.get(experiment, **overrides)
+    else:
+        e = experiment.replace(**overrides) if overrides else experiment
+    prev_backend = os.environ.get("REPRO_AGG_BACKEND")
+    try:
+        if e.agg_backend is not None:
+            os.environ["REPRO_AGG_BACKEND"] = e.agg_backend
+        with use_sort_network(e.sort_network):
+            # delivery is orthogonal to the runner: a "trace" experiment can
+            # train stepwise or fused; runner="netsim" is fused + trace with
+            # the cluster accounting attached (delivery normalized at
+            # construction).
+            delivery, info = (_trace_delivery(e) if e.delivery == "trace"
+                              else (None, None))
+            if e.runner == "stepwise":
+                return _run_stepwise(e, delivery, info)
+            return _run_fused(e, delivery, info)
+    finally:
+        if e.agg_backend is not None:
+            if prev_backend is None:
+                os.environ.pop("REPRO_AGG_BACKEND", None)
+            else:
+                os.environ["REPRO_AGG_BACKEND"] = prev_backend
+
+
+# ---------------------------------------------------------------------------
+# runner implementations
+# ---------------------------------------------------------------------------
+
+
+def _trace_delivery(e: Experiment):
+    """Simulate the named scenario; return (TraceDelivery, netsim dict)."""
+    from ..netsim import ClusterSim
+    sc = e.to_scenario()
+    trace = ClusterSim(sc).run()
+    step_ms = np.diff(np.maximum.accumulate(trace.step_done_ms), prepend=0.0)
+    info = {
+        "scenario": sc.name, "steps": int(sc.steps),
+        "virtual_ms": float(trace.step_done_ms[-1]),
+        "mean_step_ms": float(step_ms.mean()),
+        "p95_step_ms": float(np.percentile(step_ms, 95)),
+        "mean_pull_staleness_ms": float(trace.pull_stale.mean()),
+        "events": int(trace.events), "shortfalls": int(trace.shortfalls),
+        "totals": trace.ledger.totals(),
+        "summary": trace.ledger.summary(sc),
+    }
+    return trace.to_delivery(), info
+
+
+def _final_metrics(e: Experiment, state, acc, eval_set, mbuf=None) -> dict:
+    p0 = jax.tree.map(lambda l: l[0], state.params)
+    cfg = e.to_config()
+    final = {"acc": float(acc(p0, *eval_set))}
+    if e.track_delta:
+        final["delta"] = float(coordinatewise_diameter_sum(state.params,
+                                                           cfg.h_servers))
+        final["l2_diam"] = float(l2_diameter(state.params, cfg.h_servers))
+    if mbuf is not None and "rejects" in mbuf:
+        final["rejects"] = int(np.asarray(mbuf["rejects"][-1]).sum())
+    return final
+
+
+def _run_stepwise(e: Experiment, delivery=None, netsim=None) -> RunResult:
+    sim = e.build_sim(delivery)
+    cfg = sim.cfg
+    _, _, acc = e.build_problem()
+    state = sim.init_state(jax.random.PRNGKey(e.seed))
+    stream, eval_fn = classification_stream(e.seed, e.mixture, cfg.n_workers,
+                                            e.batch, e.steps)
+    ex, ey = eval_fn(e.eval_n)
+
+    def metrics(s):
+        m = {"acc": float(acc(jax.tree.map(lambda l: l[0], s.params), ex, ey))}
+        if e.track_delta:
+            m["delta"] = float(coordinatewise_diameter_sum(s.params,
+                                                           cfg.h_servers))
+            m["l2_diam"] = float(l2_diameter(s.params, cfg.h_servers))
+        return m
+
+    t0 = time.time()
+    state, logs = sim.run(state, stream, metrics_fn=metrics,
+                          metrics_every=e.metrics_every)
+    wall = time.time() - t0
+    final = _final_metrics(e, state, acc, (ex, ey))
+    return RunResult(e, logs, final, wall, provenance(e.spec_hash),
+                     netsim=netsim, state=state)
+
+
+def _run_fused(e: Experiment, delivery=None, netsim=None) -> RunResult:
+    sim = e.build_sim(delivery)
+    cfg = sim.cfg
+    _, _, acc = e.build_problem()
+    state = sim.init_state(jax.random.PRNGKey(e.seed))
+    stream = DeviceBatchStream(e.seed, e.mixture, cfg.n_workers, e.batch)
+    ex, ey = stream.eval_set(e.eval_n)
+    eng = EpochEngine(sim, acc_fn=acc, eval_set=(ex, ey),
+                      track_delta=e.track_delta,
+                      metrics_every=e.metrics_every)
+    t0 = time.time()
+    state, mbuf = eng.run(state, stream=stream, steps=e.steps,
+                          epoch_steps=e.epoch_steps)
+    wall = time.time() - t0
+
+    logs = []
+    for i in range(0, e.steps, e.metrics_every):
+        m = {"step": i, "acc": float(mbuf["acc"][i])}
+        if e.track_delta:
+            m["delta"] = float(mbuf["delta"][i])
+            m["l2_diam"] = float(mbuf["l2_diam"][i])
+        if "rejects" in mbuf:
+            m["rejects"] = int(np.asarray(mbuf["rejects"][i]).sum())
+        stal = sim.delivery.staleness(i)
+        if stal:
+            m.update(stal)
+        logs.append(m)
+    final = _final_metrics(e, state, acc, (ex, ey), mbuf)
+    return RunResult(e, logs, final, wall, provenance(e.spec_hash),
+                     netsim=netsim, state=state, buffers=mbuf)
+
+
+def write_result(res: RunResult, out_dir: str = "results/benchmarks",
+                 name: str | None = None) -> str:
+    """Write a RunResult verbatim as JSON; returns the path."""
+    os.makedirs(out_dir, exist_ok=True)
+    base = name or f"exp_{res.experiment.name.replace('/', '_')}" \
+                   f"_{res.experiment.runner}"
+    path = os.path.join(out_dir, base + ".json")
+    with open(path, "w") as fh:
+        json.dump(res.to_dict(), fh, indent=1, default=float)
+    return path

@@ -1,0 +1,297 @@
+"""The :class:`Experiment` spec — one frozen, fully-serializable object that
+*names* a ByzSGD experiment.
+
+Every comparative claim in the paper (async vs sync §5, GAR vs GAR under
+attack §6, uniform vs adversarial delivery) is a pair of experiments that
+differ in one field. Before this module each benchmark hand-wired a
+``ByzSGDConfig``, a data stream, a model factory, a schedule and one of three
+run paths; an ``Experiment`` carries all of it declaratively:
+
+  * cluster shape + message schedule (``n_workers`` … ``T``, ``variant``),
+  * threat model (a :class:`repro.core.attacks.ByzantineSpec`),
+  * delivery model (``"uniform"`` = Assumption 7, ``"trace"`` = a realized
+    ``repro.netsim`` schedule from the named ``scenario``),
+  * per-role GARs (``gar``/``pull_gar``/``gather_gar``/``worker_gar`` — the
+    comm-optimized schedules of arXiv:1911.07537 are just field choices),
+  * model / data / schedule referenced **by registry name** (``MODELS`` /
+    ``DATA`` / ``SCHEDULES`` below), never by closure,
+  * the runner (``stepwise`` oracle loop, ``fused`` epoch engine, or
+    ``netsim`` trace-driven) and backend knobs.
+
+Specs are plain values: ``to_dict``/``from_dict`` round-trip exactly
+(including through JSON), ``spec_hash`` is stable under dict key order, and
+invalid combinations fail at construction, not at run time. ``Experiment``
+*lowers* to the internal carriers — :meth:`to_config` (``ByzSGDConfig``) and
+:meth:`to_scenario` (netsim ``Scenario``) — and the lowering cross-validates
+that the round trip preserved every shared field.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from ..configs.paper_models import make_mlp_problem
+from ..core.attacks import GRADIENT_ATTACKS, MODEL_ATTACKS, ByzantineSpec
+from ..core.simulator import ByzSGDConfig
+from ..data.pipeline import MixtureSpec
+from ..optim import schedules as _schedules
+
+# ---------------------------------------------------------------------------
+# named resources: models / data / lr schedules
+# ---------------------------------------------------------------------------
+
+#: model registry: name -> MLP width (depth-2 MLPs mirror the paper's
+#: CPU-scale testbed models; see configs/paper_models.py)
+MODELS: dict[str, dict[str, int]] = {
+    "mlp_h32": {"hidden": 32, "depth": 2},
+    "mlp_h64": {"hidden": 64, "depth": 2},
+    "mlp_h128": {"hidden": 128, "depth": 2},
+    "mlp_h256": {"hidden": 256, "depth": 2},
+    "mlp_h1024": {"hidden": 1024, "depth": 2},
+}
+
+#: data registry: name -> synthetic mixture task (see data/pipeline.py for
+#: why MNIST/CIFAR are substituted)
+DATA: dict[str, MixtureSpec] = {
+    # the benchmark default (harder task: close centres, high noise)
+    "mixture10": MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2),
+    # the quickstart/example task (well-separated, converges in ~100 steps)
+    "mixture10_easy": MixtureSpec(n_classes=10, dim=32),
+    # tiny task for smoke presets and netsim walkthroughs
+    "mixture5_small": MixtureSpec(n_classes=5, dim=16, sep=2.5),
+}
+
+#: lr-schedule registry: name -> factory(lr0, decay) (paper condition B.1)
+SCHEDULES: dict[str, Callable] = {
+    "inverse_linear": lambda lr0, decay: _schedules.inverse_linear(lr0, decay),
+    "inverse_sqrt": lambda lr0, decay: _schedules.inverse_sqrt(lr0),
+    "constant": lambda lr0, decay: _schedules.constant(lr0),
+}
+
+#: schedules whose factory actually consumes ``decay`` — setting decay on any
+#: other schedule is rejected at construction (it would change spec_hash and
+#: provenance without changing the run)
+SCHEDULES_WITH_DECAY = frozenset({"inverse_linear"})
+
+RUNNERS = ("stepwise", "fused", "netsim")
+DELIVERIES = ("uniform", "trace")
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """One serializable experiment spec; see the module docstring."""
+    name: str = "experiment"
+    # -- cluster shape + message schedule (paper Table 1 preconditions)
+    n_workers: int = 9
+    f_workers: int = 2
+    n_servers: int = 5
+    f_servers: int = 1
+    q_workers: int | None = None
+    q_servers: int | None = None
+    T: int = 10
+    variant: str = "async"            # "async" | "sync"
+    # -- per-role GARs (any repro.agg registry name with pytree support)
+    gar: str = "mda"
+    pull_gar: str = "median"
+    gather_gar: str = "median"
+    worker_gar: str = "meamed"
+    # -- threat model
+    byz: ByzantineSpec = field(default_factory=ByzantineSpec)
+    # -- delivery model
+    delivery: str = "uniform"         # "uniform" | "trace"
+    scenario: str | None = None       # netsim scenario name (delivery="trace")
+    model_d: int | None = None        # netsim payload size override (scalars)
+    # -- model / data / optimizer by registry name
+    model: str = "mlp_h64"
+    data: str = "mixture10"
+    schedule: str = "inverse_linear"
+    lr0: float = 0.05
+    decay: float = 0.005
+    l2: float = 1e-4
+    # -- run shape
+    runner: str = "fused"             # "stepwise" | "fused" | "netsim"
+    steps: int = 150
+    batch: int = 25
+    seed: int = 0
+    metrics_every: int = 10
+    eval_n: int = 2048
+    track_delta: bool = False
+    # -- protocol + backend knobs
+    lip_horizon: int = 128
+    mda_exact_limit: int = 200_000
+    agg_backend: str | None = None    # None = process default (env/auto)
+    sort_network: bool = True
+    epoch_steps: int | None = None    # fused scan chunk (None = T)
+
+    # -- construction-time validation -------------------------------------
+    def __post_init__(self):
+        if not isinstance(self.byz, ByzantineSpec):
+            raise TypeError("byz must be a ByzantineSpec "
+                            f"(got {type(self.byz).__name__})")
+        # normalize attack_kwargs to a tuple-of-pairs so equality and hashing
+        # are representation-independent (JSON round-trips lists)
+        kw = tuple((str(k), v) for k, v in self.byz.attack_kwargs)
+        if kw != self.byz.attack_kwargs:
+            object.__setattr__(self, "byz",
+                               dataclasses.replace(self.byz, attack_kwargs=kw))
+        if self.runner not in RUNNERS:
+            raise ValueError(f"unknown runner {self.runner!r}; "
+                             f"choose from {RUNNERS}")
+        if self.delivery not in DELIVERIES:
+            raise ValueError(f"unknown delivery {self.delivery!r}; "
+                             f"choose from {DELIVERIES}")
+        if self.runner == "netsim" and self.delivery != "trace":
+            object.__setattr__(self, "delivery", "trace")
+        if self.delivery == "trace" and self.scenario is None:
+            raise ValueError('delivery="trace" needs a netsim scenario '
+                             "name (Experiment.scenario)")
+        if self.scenario is not None:
+            from ..netsim import scenarios as _scen
+            if self.scenario not in _scen.SCENARIOS:
+                raise ValueError(f"unknown netsim scenario {self.scenario!r}; "
+                                 f"have {sorted(_scen.SCENARIOS)}")
+        for reg, key in ((MODELS, "model"), (DATA, "data"),
+                         (SCHEDULES, "schedule")):
+            val = getattr(self, key)
+            if val not in reg:
+                raise ValueError(f"unknown {key} {val!r}; "
+                                 f"registered: {sorted(reg)}")
+        default_decay = type(self).__dataclass_fields__["decay"].default
+        if self.schedule not in SCHEDULES_WITH_DECAY \
+                and self.decay != default_decay:
+            raise ValueError(
+                f"schedule {self.schedule!r} ignores decay — setting "
+                f"decay={self.decay} would change the spec_hash without "
+                f"changing the run (leave it at the default {default_decay})")
+        wa, sa = self.byz.worker_attack, self.byz.server_attack
+        if wa is not None and wa not in GRADIENT_ATTACKS:
+            raise ValueError(f"unknown worker_attack {wa!r}; "
+                             f"have {sorted(GRADIENT_ATTACKS)}")
+        if sa is not None and sa not in MODEL_ATTACKS:
+            raise ValueError(f"unknown server_attack {sa!r}; "
+                             f"have {sorted(MODEL_ATTACKS)}")
+        for key, lo in (("steps", 1), ("batch", 1), ("metrics_every", 1),
+                        ("eval_n", 1), ("T", 1)):
+            if getattr(self, key) < lo:
+                raise ValueError(f"{key} must be >= {lo}, "
+                                 f"got {getattr(self, key)}")
+        if self.agg_backend not in (None, "auto", "jnp", "pallas"):
+            raise ValueError(f"unknown agg_backend {self.agg_backend!r}")
+        # the cluster-shape / GAR / threat-model preconditions: lowering to
+        # ByzSGDConfig runs the paper's Table-1 validation + registry checks
+        self.to_config()
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        """Nested plain-value dict (JSON-compatible; tuples become lists on a
+        JSON round trip, which :meth:`from_dict` normalizes back)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "Experiment":
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown Experiment fields: {sorted(unknown)}")
+        byz = d.get("byz")
+        if isinstance(byz, dict):
+            byz = dict(byz)
+            byz["attack_kwargs"] = tuple(
+                (str(k), v) for k, v in byz.get("attack_kwargs", ()))
+            d["byz"] = ByzantineSpec(**byz)
+        return cls(**d)
+
+    @property
+    def spec_hash(self) -> str:
+        """Stable content hash: canonical JSON (sorted keys) of
+        :meth:`to_dict`, independent of field/dict ordering."""
+        blob = json.dumps(self.to_dict(), sort_keys=True, default=list)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def replace(self, **kw) -> "Experiment":
+        return dataclasses.replace(self, **kw)
+
+    # -- lowering to the internal carriers ---------------------------------
+    def to_config(self) -> ByzSGDConfig:
+        """Lower to the simulator's ``ByzSGDConfig`` and cross-validate that
+        the lowering round-trips (every shared field preserved)."""
+        cfg = ByzSGDConfig(
+            n_workers=self.n_workers, f_workers=self.f_workers,
+            n_servers=self.n_servers, f_servers=self.f_servers,
+            q_workers=self.q_workers, q_servers=self.q_servers, T=self.T,
+            gar=self.gar, pull_gar=self.pull_gar,
+            gather_gar=self.gather_gar, worker_gar=self.worker_gar,
+            variant=self.variant, mda_exact_limit=self.mda_exact_limit,
+            lip_horizon=self.lip_horizon, byz=self.byz)
+        for key in ("n_workers", "f_workers", "n_servers", "f_servers", "T",
+                    "gar", "pull_gar", "gather_gar", "worker_gar", "variant",
+                    "byz"):
+            if getattr(cfg, key) != getattr(self, key):
+                raise ValueError(f"lowering to ByzSGDConfig changed {key}: "
+                                 f"{getattr(self, key)!r} -> "
+                                 f"{getattr(cfg, key)!r}")
+        for key in ("q_workers", "q_servers"):
+            mine = getattr(self, key)
+            if mine is not None and getattr(cfg, key) != mine:
+                raise ValueError(f"lowering to ByzSGDConfig changed {key}")
+        return cfg
+
+    def to_scenario(self, **overrides):
+        """Lower to the netsim ``Scenario`` (via its factory registry),
+        cross-validated: shape, schedule, GAR and threat-model fields must
+        survive the factory unchanged. ``overrides`` are forwarded to the
+        factory (e.g. ``model_d=…`` for payload sizing)."""
+        from ..netsim import scenarios as _scen
+        if self.scenario is None:
+            raise ValueError(f"experiment {self.name!r} names no netsim "
+                             "scenario")
+        kw = dict(n_workers=self.n_workers, f_workers=self.f_workers,
+                  n_servers=self.n_servers, f_servers=self.f_servers,
+                  q_workers=self.q_workers, q_servers=self.q_servers,
+                  T=self.T, steps=self.steps, seed=self.seed, gar=self.gar,
+                  variant=self.variant,
+                  worker_attack=self.byz.worker_attack,
+                  server_attack=self.byz.server_attack,
+                  n_byz_workers=self.byz.n_byz_workers,
+                  n_byz_servers=self.byz.n_byz_servers)
+        if self.model_d is not None:
+            kw["model_d"] = self.model_d
+        kw.update(overrides)
+        sc = _scen.build(self.scenario, **kw)
+        for key in ("n_workers", "f_workers", "n_servers", "f_servers", "T",
+                    "gar", "variant", "worker_attack", "server_attack",
+                    "n_byz_workers", "n_byz_servers"):
+            if getattr(sc, key) != kw[key]:
+                raise ValueError(f"lowering to Scenario changed {key}: "
+                                 f"{kw[key]!r} -> {getattr(sc, key)!r}")
+        return sc
+
+    # -- resource construction ---------------------------------------------
+    @property
+    def mixture(self) -> MixtureSpec:
+        return DATA[self.data]
+
+    def build_problem(self):
+        """(init_fn, loss_fn, accuracy_fn) for the named model on the named
+        data spec."""
+        mix = self.mixture
+        m = MODELS[self.model]
+        return make_mlp_problem(dim=mix.dim, hidden=m["hidden"],
+                                n_classes=mix.n_classes, depth=m["depth"],
+                                l2=self.l2)
+
+    def build_schedule(self):
+        return SCHEDULES[self.schedule](self.lr0, self.decay)
+
+    def build_sim(self, delivery=None):
+        """A ready :class:`~repro.core.simulator.ByzSGDSimulator` (delivery
+        defaults to ``UniformDelivery``; pass a ``TraceDelivery`` for
+        trace-driven runs)."""
+        from ..core.simulator import ByzSGDSimulator
+        init, loss, _ = self.build_problem()
+        return ByzSGDSimulator(self.to_config(), init, loss,
+                               self.build_schedule(), delivery=delivery)

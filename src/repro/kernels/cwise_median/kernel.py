@@ -1,16 +1,20 @@
-"""Pallas TPU kernel: coordinate-wise median over a small replica stack.
+"""Pallas TPU kernels: coordinate-wise order statistics over a replica stack.
 
 The DMC gather phase and every worker model-pull apply a coordinate-wise
-median over n <= 64 parameter/model vectors of dimension d (up to 1e11 here) —
-a pure memory-bound streaming op (paper complexity O(n_ps * d)). The kernel
-streams [n, block_d] VMEM tiles and sorts the n-axis with a static bitonic
-sorting network built from jnp.minimum/maximum (vector ops only; no
-data-dependent control flow, so it maps to the VPU with full lanes).
+order-statistic rule (Median / MeaMed / trimmed mean) over n <= 64
+parameter/model vectors of dimension d (up to 1e11 here) — pure memory-bound
+streaming ops (paper complexity O(n_ps * d)). All three kernels stream
+[n, block_d] VMEM tiles and share ONE static bitonic sorting network built
+from jnp.minimum/maximum (vector ops only; no data-dependent control flow,
+so it maps to the VPU with full lanes); the rules differ only in how they
+reduce the sorted rows.
 
-n is padded to the next power of two with +inf rows; since pads sort last, the
-median of the n real rows is row (n-1)//2 and n//2 of the sorted tile.
+n is padded to the next power of two with +inf rows; since pads sort last,
+the statistics of the n real rows live in the first n sorted rows.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -36,26 +40,101 @@ def bitonic_pairs(n_pow2: int):
     return pairs
 
 
-def _median_kernel(x_ref, o_ref, *, n: int, n_pow2: int):
+def _sorted_rows(x_ref, n_pow2: int):
+    """Sort the tile's row axis through the shared bitonic network."""
     rows = [x_ref[i, :] for i in range(n_pow2)]  # each [block_d]
     for stage in bitonic_pairs(n_pow2):
         for (lo_i, hi_i) in stage:
             a, b = rows[lo_i], rows[hi_i]
             rows[lo_i] = jnp.minimum(a, b)
             rows[hi_i] = jnp.maximum(a, b)
+    return rows
+
+
+def _median_kernel(x_ref, o_ref, *, n: int, n_pow2: int):
+    rows = _sorted_rows(x_ref, n_pow2)
     med = 0.5 * (rows[(n - 1) // 2] + rows[n // 2])
     o_ref[0, :] = med
 
 
-def median_pallas_call(n: int, n_pow2: int, d_pad: int, block_d: int,
-                       interpret: bool = False):
-    from functools import partial
-    grid = (d_pad // block_d,)
+def _trimmed_mean_kernel(x_ref, o_ref, *, n: int, n_pow2: int, f: int):
+    """Mean of sorted rows f..n-f-1 (drop the f lowest and f highest)."""
+    rows = _sorted_rows(x_ref, n_pow2)
+    acc = rows[f]
+    for i in range(f + 1, n - f):
+        acc = acc + rows[i]
+    o_ref[0, :] = acc / (n - 2 * f)
+
+
+def _meamed_kernel(x_ref, o_ref, *, n: int, n_pow2: int, f: int):
+    """Mean-around-Median: per coordinate, mean of the n-f values closest to
+    the median. In sorted order those values form a contiguous window
+    [i, i+n-f), i <= f, whose max distance to the median is attained at an
+    endpoint — so the selection is a running elementwise argmin over f+1
+    window candidates, all on sorted rows from the shared network.
+
+    Windows can TIE on the max endpoint distance (duplicate values — e.g.
+    colluding Byzantine payloads), and the max alone cannot discriminate
+    them; ties break toward the smaller in-window distance *sum*, which is
+    what "the n-f smallest distances" (the jnp reference's argsort) uniquely
+    minimizes.
+
+    Tie contract: the selected window always matches the reference's
+    selection *quality* exactly — same max distance and same distance sum,
+    the quantities the robustness analysis depends on (gated by
+    tests/test_agg_backends.py on tie-heavy integer stacks). When two values
+    sit at exactly the same distance on opposite sides of the median, the
+    reference breaks the tie by input position, which sorted tiles cannot
+    observe — the kernel then averages the equidistant value from the
+    leftmost (smaller-valued) best window instead; on continuous data such
+    ties have probability zero."""
+    rows = _sorted_rows(x_ref, n_pow2)
+    med = 0.5 * (rows[(n - 1) // 2] + rows[n // 2])
+    m = n - f
+    dist = [jnp.abs(rows[j] - med) for j in range(n)]
+    win_sum = rows[0]
+    win_dsum = dist[0]
+    for j in range(1, m):
+        win_sum = win_sum + rows[j]
+        win_dsum = win_dsum + dist[j]
+    best_sum, best_dsum = win_sum, win_dsum
+    best_d = jnp.maximum(med - rows[0], rows[m - 1] - med)
+    for i in range(1, f + 1):
+        win_sum = win_sum - rows[i - 1] + rows[i + m - 1]
+        win_dsum = win_dsum - dist[i - 1] + dist[i + m - 1]
+        d = jnp.maximum(med - rows[i], rows[i + m - 1] - med)
+        take = (d < best_d) | ((d == best_d) & (win_dsum < best_dsum))
+        best_sum = jnp.where(take, win_sum, best_sum)
+        best_dsum = jnp.where(take, win_dsum, best_dsum)
+        best_d = jnp.minimum(best_d, d)
+    o_ref[0, :] = best_sum / m
+
+
+def _rule_pallas_call(kernel, n_pow2: int, d_pad: int, block_d: int,
+                      interpret: bool, **kw):
     return pl.pallas_call(
-        partial(_median_kernel, n=n, n_pow2=n_pow2),
-        grid=grid,
+        partial(kernel, n_pow2=n_pow2, **kw),
+        grid=(d_pad // block_d,),
         in_specs=[pl.BlockSpec((n_pow2, block_d), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
         interpret=interpret,
     )
+
+
+def median_pallas_call(n: int, n_pow2: int, d_pad: int, block_d: int,
+                       interpret: bool = False):
+    return _rule_pallas_call(_median_kernel, n_pow2, d_pad, block_d,
+                             interpret, n=n)
+
+
+def trimmed_mean_pallas_call(n: int, f: int, n_pow2: int, d_pad: int,
+                             block_d: int, interpret: bool = False):
+    return _rule_pallas_call(_trimmed_mean_kernel, n_pow2, d_pad, block_d,
+                             interpret, n=n, f=f)
+
+
+def meamed_pallas_call(n: int, f: int, n_pow2: int, d_pad: int,
+                       block_d: int, interpret: bool = False):
+    return _rule_pallas_call(_meamed_kernel, n_pow2, d_pad, block_d,
+                             interpret, n=n, f=f)

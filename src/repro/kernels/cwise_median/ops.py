@@ -1,8 +1,10 @@
-"""Jitted wrapper around the coordinate-wise median Pallas kernel.
+"""Jitted wrappers around the coordinate-wise order-statistic Pallas kernels.
 
-The Pallas backend of the ``median`` aggregator; call sites reach it through
-``repro.agg`` dispatch (``backend="pallas"`` or auto on TPU), which falls
-back to the jnp reference for stacks larger than the kernel's n <= 64 limit.
+The Pallas backends of the ``median``, ``trimmed_mean`` and ``meamed``
+aggregators (one shared bitonic sorting network, three reductions); call
+sites reach them through ``repro.agg`` dispatch (``backend="pallas"`` or
+auto on TPU), which falls back to the jnp reference for stacks larger than
+the kernels' n <= 64 limit.
 """
 from __future__ import annotations
 
@@ -11,13 +13,32 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import median_pallas_call
+from .kernel import (meamed_pallas_call, median_pallas_call,
+                     trimmed_mean_pallas_call)
 
 _LANE = 128
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _tile(x: jax.Array, block_d: int):
+    """Pad the stack to (next-pow2 rows of +inf, lane-aligned d) for the
+    sorting-network kernels; pads sort last."""
+    n, d = x.shape
+    if n > 64:
+        raise ValueError("cwise order-statistic kernels are sized for "
+                         "replica stacks n <= 64")
+    n_pow2 = 1
+    while n_pow2 < n:
+        n_pow2 *= 2
+    block_d = min(block_d, -(-d // _LANE) * _LANE)
+    block_d = -(-block_d // _LANE) * _LANE
+    d_pad = -(-d // block_d) * block_d
+    xp = jnp.full((n_pow2, d_pad), jnp.inf, jnp.float32)
+    xp = xp.at[:n, :d].set(x.astype(jnp.float32))
+    return xp, n_pow2, d_pad, block_d
 
 
 @partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -27,15 +48,35 @@ def cwise_median(x: jax.Array, *, block_d: int = 1024,
     if interpret is None:
         interpret = _default_interpret()
     n, d = x.shape
-    if n > 64:
-        raise ValueError("cwise_median kernel is sized for replica stacks n<=64")
-    n_pow2 = 1
-    while n_pow2 < n:
-        n_pow2 *= 2
-    block_d = min(block_d, -(-d // _LANE) * _LANE)
-    block_d = -(-block_d // _LANE) * _LANE
-    d_pad = -(-d // block_d) * block_d
-    xp = jnp.full((n_pow2, d_pad), jnp.inf, jnp.float32)
-    xp = xp.at[:n, :d].set(x.astype(jnp.float32))
+    xp, n_pow2, d_pad, block_d = _tile(x, block_d)
     out = median_pallas_call(n, n_pow2, d_pad, block_d, interpret)(xp)
+    return out[0, :d]
+
+
+@partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
+def cwise_trimmed_mean(x: jax.Array, f: int, *, block_d: int = 1024,
+                       interpret: bool | None = None) -> jax.Array:
+    """[n, d] -> [d] f32 trimmed mean (drop f lowest/highest; n <= 64)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x.shape
+    if n <= 2 * f:
+        raise ValueError(f"trimmed_mean needs n > 2f (n={n}, f={f})")
+    xp, n_pow2, d_pad, block_d = _tile(x, block_d)
+    out = trimmed_mean_pallas_call(n, f, n_pow2, d_pad, block_d,
+                                   interpret)(xp)
+    return out[0, :d]
+
+
+@partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
+def cwise_meamed(x: jax.Array, f: int, *, block_d: int = 1024,
+                 interpret: bool | None = None) -> jax.Array:
+    """[n, d] -> [d] f32 mean-around-median (n <= 64)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x.shape
+    if n <= f:
+        raise ValueError(f"meamed needs n > f (n={n}, f={f})")
+    xp, n_pow2, d_pad, block_d = _tile(x, block_d)
+    out = meamed_pallas_call(n, f, n_pow2, d_pad, block_d, interpret)(xp)
     return out[0, :d]

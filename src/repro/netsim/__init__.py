@@ -11,7 +11,7 @@ and staleness tensors plug into the protocol simulator through
 Quick start::
 
     from repro.netsim import scenarios, cluster
-    sc = scenarios.get("heavy_tail_stragglers", steps=20)
+    sc = scenarios.build("heavy_tail_stragglers", steps=20)
     trace = cluster.ClusterSim(sc).run()
     print(trace.ledger.summary(sc))
     delivery = trace.to_delivery()      # feed to ByzSGDSimulator(delivery=...)

@@ -128,13 +128,25 @@ class ClusterSim:
         self._gather_next_k: dict[tuple[int, int], int] = {}
         # trace arrays
         S, G = sc.steps, self.n_gathers
-        self.pull_idx = np.zeros((S, self.n_w, sc.q_servers), np.int32)
-        self.pull_stale = np.zeros((S, self.n_w, sc.q_servers), np.float32)
-        self.push_idx = np.zeros((S, self.n_ps, sc.q_workers), np.int32)
-        self.push_stale = np.zeros((S, self.n_ps, sc.q_workers), np.float32)
+        self.pull_idx = np.zeros((S, self.n_w, sc.pull_need), np.int32)
+        self.pull_stale = np.zeros((S, self.n_w, sc.pull_need), np.float32)
+        self.push_idx = np.zeros((S, self.n_ps, sc.push_need), np.int32)
+        self.push_stale = np.zeros((S, self.n_ps, sc.push_need), np.float32)
         self.gather_idx = np.zeros((G, self.n_ps, sc.q_servers), np.int32)
         self.gather_stale = np.zeros((G, self.n_ps, sc.q_servers), np.float32)
         self.step_done_ms = np.zeros(S, np.float64)
+        # closed-row flags: a legitimately closed quorum can record the
+        # all-zeros row (e.g. sync pull_need=1 delivering server 0), so the
+        # dead-row fill must not infer "never closed" from the values
+        self.pull_closed = np.zeros((S, self.n_w), bool)
+        self.push_closed = np.zeros((S, self.n_ps), bool)
+
+    def _pull_fallback(self, w: int, k: int):
+        """Pad pattern for a starved pull quorum: in the sync schedule the
+        only scheduled sender is the round-robin server (w + k) % n_ps."""
+        if self.sc.variant == "sync":
+            return lambda i: (w + k + i) % self.n_ps
+        return lambda i: (w + i) % self.n_ps
 
     # -- wire --------------------------------------------------------------
     def _send(self, src: int, dst: int, phase: str, tag: int) -> None:
@@ -191,15 +203,19 @@ class ClusterSim:
     def _worker_try_close(self, w: int, force: bool = False) -> None:
         k = self.w_step[w]
         q = self.w_pull[w].setdefault(k, _Quorum())
-        need = self.sc.q_servers
+        need = self.sc.pull_need
         if q.closed or (len(q.senders) < need and not force):
             return
         q.closed = True
-        idx, stale = _pad(q.senders, q.stale, need,
-                          fallback=lambda i: (w + i) % self.n_ps)
+        # sync pads must name the round-robin server that was actually
+        # scheduled to send at step k, or the trace/ledger would attribute
+        # the pull to a server that never sent it
+        fb = self._pull_fallback(w, k)
+        idx, stale = _pad(q.senders, q.stale, need, fallback=fb)
         self.shortfalls += max(need - len(q.senders), 0)
         self.pull_idx[k, w] = idx
         self.pull_stale[k, w] = stale
+        self.pull_closed[k, w] = True
         for _ in range(min(len(q.senders), need)):
             self.ledger.deliver(self.n_ps + w, "pull", self.nbytes)
         for _ in range(max(len(q.senders) - need, 0)):
@@ -231,6 +247,11 @@ class ClusterSim:
             return
         self.s_step[s] = k
         for w in range(self.n_w):
+            # sync variant (§5): worker w pulls ONE model per step, from the
+            # round-robin server (w + k) % n_ps — the byte saving the paper's
+            # throughput argument rests on. Async broadcasts to everyone.
+            if self.sc.variant == "sync" and (w + k) % self.n_ps != s:
+                continue
             self._send(s, self.n_ps + w, "pull", k)
         self._server_try_close(s)
 
@@ -250,7 +271,7 @@ class ClusterSim:
     def _server_try_close(self, s: int, force: bool = False) -> None:
         k = self.s_step[s]
         q = self.s_push[s].setdefault(k, _Quorum())
-        need = self.sc.q_workers
+        need = self.sc.push_need
         if q.closed or (len(q.senders) < need and not force):
             return
         q.closed = True
@@ -259,6 +280,7 @@ class ClusterSim:
         self.shortfalls += max(need - len(q.senders), 0)
         self.push_idx[k, s] = idx
         self.push_stale[k, s] = stale
+        self.push_closed[k, s] = True
         for _ in range(min(len(q.senders), need)):
             self.ledger.deliver(s, "push", self.nbytes)
         for _ in range(max(len(q.senders) - need, 0)):
@@ -365,17 +387,18 @@ class ClusterSim:
         deterministic pads so the trace always drives the simulator."""
         for k in range(self.sc.steps):
             for w in range(self.n_w):
-                if not self.pull_idx[k, w].any() and self.w_step[w] <= k \
+                if not self.pull_closed[k, w] and self.w_step[w] <= k \
                         and not self.w_done[w]:
-                    self.pull_idx[k, w] = [(w + i) % self.n_ps
-                                           for i in range(self.sc.q_servers)]
-                    self.shortfalls += self.sc.q_servers
+                    fb = self._pull_fallback(w, k)
+                    self.pull_idx[k, w] = [fb(i)
+                                           for i in range(self.sc.pull_need)]
+                    self.shortfalls += self.sc.pull_need
             for s in range(self.n_ps):
-                if not self.push_idx[k, s].any() and self.s_step[s] <= k \
+                if not self.push_closed[k, s] and self.s_step[s] <= k \
                         and not self.s_done[s]:
                     self.push_idx[k, s] = [(s + i) % self.n_w
-                                           for i in range(self.sc.q_workers)]
-                    self.shortfalls += self.sc.q_workers
+                                           for i in range(self.sc.push_need)]
+                    self.shortfalls += self.sc.push_need
         for r in range(self.n_gathers):
             for s in range(self.n_ps):
                 if not self.gather_idx[r, s].any():

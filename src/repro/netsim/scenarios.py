@@ -6,12 +6,21 @@ sizes. The registry maps names to factories; every factory accepts keyword
 overrides (``steps=…``, ``seed=…``, ``model_d=…``) forwarded to the dataclass
 so tests and benchmarks can shrink or scale runs::
 
-    sc = scenarios.get("crash_storm", steps=20, seed=3)
+    sc = scenarios.build("crash_storm", steps=20, seed=3)
     trace = ClusterSim(sc).run()
+
+The *experiment-level* entry point is ``repro.exp``: its ``netsim/<name>``
+presets name these scenarios and train over the realized trace
+(``exp.run("netsim/crash_storm")``); ``Experiment.to_scenario()`` lowers to
+this registry. The old module-level ``get()`` survives as a deprecation shim
+over :func:`build`.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import warnings
 from dataclasses import dataclass, field
 
 import repro.agg as agg
@@ -35,6 +44,10 @@ class Scenario:
     q_servers: int | None = None
     T: int = 5
     steps: int = 30
+    # message schedule: "async" waits on q-of-n quorums; "sync" (§5) has each
+    # worker pull ONE model round-robin and servers wait for ALL n_w
+    # gradients — fewer bytes on the wire, the paper's throughput argument
+    variant: str = "async"
     # payload: model dimension in scalars (d) and bytes per scalar
     model_d: int = 79_510          # paper's MNIST CNN
     dtype_bytes: int = 4
@@ -61,14 +74,27 @@ class Scenario:
     n_byz_servers: int = 0
 
     def __post_init__(self):
+        if self.variant not in ("async", "sync"):
+            raise ValueError(f"unknown variant {self.variant!r}")
         qw = self.q_workers or (self.n_workers - self.f_workers)
         qs = self.q_servers or max(self.n_servers - self.f_servers,
                                    2 * self.f_servers + 2)
         object.__setattr__(self, "q_workers", qw)
         object.__setattr__(self, "q_servers", qs)
         validate_counts(self.n_workers, self.f_workers, self.n_servers,
-                        self.f_servers, qw, qs)
+                        self.f_servers, qw, qs,
+                        synchronous=(self.variant == "sync"))
         agg.get(self.gar).validate(qw, self.f_workers)
+
+    # effective per-step quorum sizes the cluster waits on (the DMC gather
+    # keeps q_servers in both variants)
+    @property
+    def pull_need(self) -> int:
+        return 1 if self.variant == "sync" else self.q_servers
+
+    @property
+    def push_need(self) -> int:
+        return self.n_workers if self.variant == "sync" else self.q_workers
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -158,10 +184,64 @@ SCENARIOS = {
 }
 
 
-def get(name: str, **kw) -> Scenario:
+def build(name: str, **kw) -> Scenario:
+    """Canonical scenario constructor: factory by name, kwargs override any
+    dataclass field."""
     try:
         factory = SCENARIOS[name]
     except KeyError:
         raise KeyError(f"unknown scenario {name!r}; "
                        f"have {sorted(SCENARIOS)}") from None
     return factory(**kw)
+
+
+def get(name: str, **kw) -> Scenario:
+    """Deprecated alias of :func:`build`.
+
+    Scenario presets are subsumed by the experiment registry: prefer
+    ``repro.exp.get("netsim/<name>")`` (a full trainable spec) or
+    :func:`build` for the bare Scenario.
+    """
+    warnings.warn(
+        "repro.netsim.scenarios.get() is deprecated; use "
+        "scenarios.build(name, ...) or the repro.exp presets "
+        "(exp.get('netsim/<name>'))", DeprecationWarning, stacklevel=2)
+    return build(name, **kw)
+
+
+# --------------------------------------------------------------------------
+# measured compute times (ROADMAP: feed the engine's honest steps/sec into
+# the wall-clock model instead of the guessed ComputeTime default)
+
+
+def measured_compute(model: str = "mlp_h64", variant: str = "async",
+                     path: str | None = None, sigma: float = 0.1
+                     ) -> ComputeTime:
+    """A :class:`ComputeTime` calibrated from the committed throughput
+    baseline (``BENCH_throughput.json``, the fused-engine lane).
+
+    ``1000 / steps_per_s`` of the ``{variant}/{model}`` lane becomes the mean
+    per-step compute cost, so netsim's sync-vs-async end-to-end wall-clock
+    (§5) runs off *measured* numbers rather than the default guess. The
+    measured time includes the server update, so scenarios using it should
+    keep ``update_ms`` small to avoid double counting.
+    """
+    if path is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        candidates = ["BENCH_throughput.json",
+                      os.path.join(here, *[os.pardir] * 3,
+                                   "BENCH_throughput.json")]
+        path = next((p for p in candidates if os.path.exists(p)), None)
+        if path is None:
+            raise FileNotFoundError(
+                "BENCH_throughput.json not found (run `python -m "
+                "benchmarks.exp_throughput --seed-baseline` or pass path=)")
+    with open(path) as fh:
+        bench = json.load(fh)
+    lane = f"{variant}/{model}"
+    try:
+        sps = float(bench["lanes"][lane]["fused"]["steps_per_s"])
+    except KeyError:
+        raise KeyError(f"lane {lane!r} not in {path}; have "
+                       f"{sorted(bench.get('lanes', {}))}") from None
+    return ComputeTime(mean_ms=1000.0 / sps, sigma=sigma)

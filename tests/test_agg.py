@@ -265,7 +265,7 @@ class TestNetsimMaskComposition:
         rule and agree with index-subset aggregation of the same trace."""
         from repro.netsim import scenarios
         from repro.netsim.cluster import ClusterSim
-        sc = scenarios.get("heavy_tail_stragglers", steps=4, seed=2)
+        sc = scenarios.build("heavy_tail_stragglers", steps=4, seed=2)
         tr = ClusterSim(sc).run()
         masks = tr.push_masks()          # [steps, n_ps, n_w]
         x = rand(sc.n_workers, 15, seed=17)
@@ -280,8 +280,8 @@ class TestNetsimMaskComposition:
     def test_scenario_gar_is_registry_validated(self):
         from repro.netsim import scenarios
         with pytest.raises(KeyError, match="unknown aggregator"):
-            scenarios.get("baseline_uniform", gar="nope")
-        assert scenarios.get("baseline_uniform", gar="krum").gar == "krum"
+            scenarios.build("baseline_uniform", gar="nope")
+        assert scenarios.build("baseline_uniform", gar="krum").gar == "krum"
 
 
 class TestSortNetwork:

@@ -44,7 +44,8 @@ def test_mda_diameter_backends_agree(n, f):
     np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("name", ["mda", "median", "krum", "multi_krum"])
+@pytest.mark.parametrize("name", ["mda", "median", "krum", "multi_krum",
+                                  "meamed", "trimmed_mean"])
 @pytest.mark.parametrize("n,d", [(9, 100), (8, 127), (13, 257)])
 def test_rule_backends_agree(name, n, d):
     """End-to-end: the registry rule produces the same aggregate on both
@@ -56,6 +57,73 @@ def test_rule_backends_agree(name, n, d):
     ref = spec(x, f, backend="jnp")
     ker = spec(x, f, backend="pallas")
     np.testing.assert_allclose(ker, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("f", [0, 1, 2])
+def test_cwise_order_statistic_kernels_agree(n, d, f):
+    """meamed + trimmed_mean share cwise_median's sorting network; their
+    kernels must match the jnp references across odd/even n, off-block d,
+    and every admissible f."""
+    if n <= 2 * f:
+        pytest.skip("trimmed_mean needs n > 2f")
+    x = rand(n, d, seed=7 * n + d + f)
+    for name in ("meamed", "trimmed_mean"):
+        spec = agg.get(name)
+        ref = spec(x, f, backend="jnp")
+        ker = spec(x, f, backend="pallas")
+        np.testing.assert_allclose(ker, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{name} n={n} d={d} f={f}")
+
+
+def test_meamed_kernel_asymmetric_ties_match_reference():
+    """Colluding duplicate payloads tie several candidate windows on max
+    endpoint distance; the kernel must still pick the reference's window
+    (the one with the n-f smallest distances), not a window stuffed with
+    tied outliers."""
+    col = jnp.asarray([0., -3., 0., 0., 1., -3., -3., -1., -3., 1.])[:, None]
+    ref = agg.rules.meamed(col, 3)
+    ker = agg.get("meamed")(col, 3, backend="pallas")
+    np.testing.assert_allclose(ker, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_meamed_kernel_tie_quality_on_integer_stacks():
+    """On tie-heavy integer data the kernel's selection must match the
+    reference's *quality* exactly — same max distance and same distance sum
+    (the quantities the robustness analysis uses). The averaged values may
+    differ only when a pair sits exactly equidistant on opposite sides of
+    the median (the reference breaks that tie by input position, which a
+    sorted tile cannot see)."""
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        n = int(rng.integers(3, 14))
+        f = int(rng.integers(0, (n - 1) // 2 + 1))
+        x = np.asarray(rng.integers(-3, 4, size=(n, 8)), np.float32)
+        ker = np.asarray(agg.get("meamed")(jnp.asarray(x), f,
+                                           backend="pallas"))
+        m = n - f
+        med = np.median(x, axis=0)
+        for c in range(x.shape[1]):
+            d_ref = np.sort(np.abs(x[:, c] - med[c]))[:m]
+            s = np.sort(x[:, c])
+            # the kernel's lexicographic (max, sum) window criterion
+            cand = [(max(abs(s[i] - med[c]), abs(s[i + m - 1] - med[c])),
+                     np.abs(s[i:i + m] - med[c]).sum(), s[i:i + m].mean())
+                    for i in range(f + 1)]
+            kmax, ksum, kmean = min(cand, key=lambda t: (t[0], t[1]))
+            assert kmax == pytest.approx(d_ref.max(), abs=1e-5)
+            assert ksum == pytest.approx(d_ref.sum(), abs=1e-4)
+            assert ker[c] == pytest.approx(kmean, abs=1e-5)
+
+
+def test_order_statistic_kernels_size_limit_falls_back():
+    """auto backend falls back past n<=64 / multi-dim leaves; explicit pallas
+    raises (same contract as the median kernel)."""
+    x = rand(65, 32)
+    np.testing.assert_allclose(agg.get("meamed")(x, 2),
+                               agg.rules.meamed(x, 2), rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError, match="n <= 64"):
+        agg.get("trimmed_mean")(x, 2, backend="pallas")
 
 
 def test_median_kernel_size_limit_falls_back():

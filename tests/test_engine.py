@@ -126,7 +126,7 @@ class TestSyncEquivalence:
 
 def heavy_tail_delivery():
     from repro.netsim import ClusterSim, scenarios
-    sc = scenarios.get("heavy_tail_stragglers", n_workers=7, f_workers=2,
+    sc = scenarios.build("heavy_tail_stragglers", n_workers=7, f_workers=2,
                        n_servers=5, f_servers=1, T=5, steps=10, model_d=1000)
     return ClusterSim(sc).run().to_delivery()
 

@@ -1,0 +1,317 @@
+"""repro.exp: spec round-trips, hash stability, construction-time validation,
+preset registry, and the one-spec-three-runners acceptance (stepwise == fused
+params, netsim trace-driven run with provenance + accounting)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import repro.exp as exp
+from repro.core.attacks import ByzantineSpec
+from repro.exp.spec import DATA, MODELS, SCHEDULES
+from tests._hypothesis_compat import given, settings, st
+
+SMALL = dict(n_workers=7, f_workers=2, n_servers=5, f_servers=1, T=5,
+             steps=8, batch=8, model="mlp_h32", data="mixture5_small",
+             metrics_every=4, eval_n=128)
+
+
+def small(**kw):
+    return exp.Experiment(**{**SMALL, **kw})
+
+
+# ---------------------------------------------------------------------------
+# serialization round trip + spec hash
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    def test_default_spec_round_trips(self):
+        e = exp.Experiment()
+        assert exp.Experiment.from_dict(e.to_dict()) == e
+
+    def test_every_preset_round_trips_through_json(self):
+        for name in exp.names():
+            e = exp.get(name)
+            blob = json.dumps(e.to_dict(), default=list)
+            e2 = exp.Experiment.from_dict(json.loads(blob))
+            assert e2 == e, name
+            assert e2.spec_hash == e.spec_hash, name
+
+    def test_attack_kwargs_survive_json(self):
+        e = small(byz=ByzantineSpec(worker_attack="reversed", n_byz_workers=2,
+                                    attack_kwargs=(("scale", 10.0),),
+                                    equivocate=True))
+        e2 = exp.Experiment.from_dict(json.loads(json.dumps(e.to_dict())))
+        assert e2 == e and e2.byz.kwargs() == {"scale": 10.0}
+
+    def test_unknown_field_rejected(self):
+        d = exp.Experiment().to_dict()
+        d["bogus"] = 1
+        with pytest.raises(ValueError, match="unknown Experiment fields"):
+            exp.Experiment.from_dict(d)
+
+    def test_spec_hash_stable_across_field_order(self):
+        d = small().to_dict()
+        shuffled = dict(reversed(list(d.items())))
+        assert exp.Experiment.from_dict(shuffled).spec_hash == \
+            small().spec_hash
+
+    def test_spec_hash_differs_on_any_field(self):
+        assert small().spec_hash != small(gar="median").spec_hash
+        assert small().spec_hash != small(seed=1).spec_hash
+
+    @settings(max_examples=15)
+    @given(n_extra=st.integers(0, 6), f_w=st.integers(0, 2),
+           T=st.integers(1, 7), seed=st.integers(0, 10_000),
+           lr0=st.floats(1e-4, 1.0))
+    def test_random_valid_specs_round_trip(self, n_extra, f_w, T, seed, lr0):
+        e = small(n_workers=3 * f_w + 1 + n_extra, f_workers=f_w, T=T,
+                  seed=seed, lr0=lr0)
+        e2 = exp.Experiment.from_dict(json.loads(json.dumps(e.to_dict())))
+        assert e2 == e and e2.spec_hash == e.spec_hash
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+
+class TestValidation:
+    def test_cluster_preconditions_enforced(self):
+        with pytest.raises(ValueError, match="3f_w\\+1"):
+            small(n_workers=6, f_workers=2)
+        with pytest.raises(ValueError, match="3f_ps\\+2"):
+            small(n_servers=4, f_servers=1)
+
+    @pytest.mark.parametrize("field,value,match", [
+        ("runner", "warp", "unknown runner"),
+        ("delivery", "psychic", "unknown delivery"),
+        ("gar", "nope", "unknown aggregator"),
+        ("model", "resnet9000", "unknown model"),
+        ("data", "imagenet", "unknown data"),
+        ("schedule", "cyclic", "unknown schedule"),
+        ("scenario", "volcano", "unknown netsim scenario"),
+        ("steps", 0, "steps must be"),
+        ("agg_backend", "cuda", "unknown agg_backend"),
+    ])
+    def test_bad_fields_raise_at_construction(self, field, value, match):
+        with pytest.raises((ValueError, KeyError), match=match):
+            small(**{field: value})
+
+    def test_bad_attack_names_raise(self):
+        with pytest.raises(ValueError, match="unknown worker_attack"):
+            small(byz=ByzantineSpec(worker_attack="meteor", n_byz_workers=1))
+        with pytest.raises(ValueError, match="unknown server_attack"):
+            small(byz=ByzantineSpec(server_attack="meteor", n_byz_servers=1))
+
+    def test_trace_delivery_requires_scenario(self):
+        with pytest.raises(ValueError, match="needs a netsim scenario"):
+            small(delivery="trace")
+
+    def test_decay_rejected_on_schedules_that_ignore_it(self):
+        # a decay that the factory discards would fork spec_hash/provenance
+        # without changing the run
+        with pytest.raises(ValueError, match="ignores decay"):
+            small(schedule="constant", decay=0.05)
+        assert small(schedule="constant").schedule == "constant"  # default ok
+        assert small(schedule="inverse_linear", decay=0.05).decay == 0.05
+
+    def test_netsim_runner_normalizes_delivery(self):
+        e = small(runner="netsim", scenario="baseline_uniform")
+        assert e.delivery == "trace"
+
+    def test_bulyan_rejected_for_pytree_roles(self):
+        # tree_mode=None rules cannot be per-role GARs (ByzSGDConfig check)
+        with pytest.raises(ValueError, match="pytree"):
+            small(n_workers=12, f_workers=2, gar="bulyan")
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+class TestLowering:
+    def test_to_config_round_trips(self):
+        e = small(gar="median", pull_gar="meamed", variant="async")
+        cfg = e.to_config()
+        for k in ("n_workers", "f_workers", "n_servers", "f_servers", "T",
+                  "gar", "pull_gar", "gather_gar", "worker_gar", "byz"):
+            assert getattr(cfg, k) == getattr(e, k)
+
+    def test_to_scenario_round_trips(self):
+        e = small(scenario="heavy_tail_stragglers", seed=3)
+        sc = e.to_scenario(model_d=500)
+        assert (sc.n_workers, sc.f_workers, sc.T, sc.seed, sc.gar) == \
+            (e.n_workers, e.f_workers, e.T, e.seed, e.gar)
+        assert sc.model_d == 500
+
+    def test_every_netsim_preset_lowers(self):
+        for name in exp.names():
+            e = exp.get(name)
+            e.to_config()
+            if e.scenario is not None:
+                e.to_scenario(steps=5)
+
+    def test_build_problem_and_schedule_resolve(self):
+        e = small()
+        init, loss, acc = e.build_problem()
+        params = init(jax.random.PRNGKey(0))
+        assert params["w0"].shape == (DATA[e.data].dim,
+                                      MODELS[e.model]["hidden"])
+        assert float(e.build_schedule()(0)) == pytest.approx(e.lr0)
+        assert set(SCHEDULES) >= {"inverse_linear", "constant"}
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+
+class TestPresets:
+    def test_get_with_overrides_revalidates(self):
+        assert exp.get("smoke", steps=3).steps == 3
+        with pytest.raises(ValueError):
+            exp.get("smoke", n_workers=3)
+
+    def test_unknown_preset(self):
+        with pytest.raises(KeyError, match="unknown experiment preset"):
+            exp.get("does_not_exist")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            exp.register(exp.get("smoke"))
+
+    def test_markdown_table_lists_all(self):
+        table = exp.markdown_table()
+        for name in exp.names():
+            assert f"`{name}`" in table
+
+
+# ---------------------------------------------------------------------------
+# one spec, three runners (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+class TestRunners:
+    def test_stepwise_equals_fused(self):
+        e = exp.get("smoke", steps=7, metrics_every=1)
+        a = exp.run(e, runner="stepwise")
+        b = exp.run(e, runner="fused")
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(b.state.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose([m["acc"] for m in a.logs],
+                                   [m["acc"] for m in b.logs],
+                                   rtol=1e-5, atol=1e-6)
+        assert a.final["acc"] == pytest.approx(b.final["acc"], abs=1e-5)
+
+    def test_netsim_runner_attaches_accounting(self):
+        res = exp.run("smoke", runner="netsim", steps=6)
+        assert res.netsim is not None
+        assert res.netsim["scenario"] == "baseline_uniform"
+        assert res.netsim["virtual_ms"] > 0
+        assert "totals" in res.netsim
+
+    def test_trace_stepwise_equals_trace_fused(self):
+        e = exp.get("smoke", steps=6, delivery="trace")
+        a = exp.run(e, runner="stepwise")
+        b = exp.run(e, runner="netsim")
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(b.state.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-6)
+
+    def test_result_serializes_with_provenance(self):
+        res = exp.run("smoke", steps=4)
+        d = json.loads(json.dumps(res.to_dict(), default=float))
+        assert d["experiment"]["name"] == "smoke"
+        prov = d["provenance"]
+        assert prov["spec_hash"] == res.experiment.spec_hash
+        assert set(prov) >= {"spec_hash", "git_sha", "jax_version", "device"}
+        assert d["final"]["acc"] == pytest.approx(res.final["acc"])
+
+    def test_overrides_on_run(self):
+        res = exp.run("smoke", steps=4, metrics_every=2)
+        assert res.experiment.steps == 4
+        assert [m["step"] for m in res.logs] == [0, 2]
+
+    def test_write_result(self, tmp_path):
+        res = exp.run("smoke", steps=4)
+        path = exp.write_result(res, out_dir=str(tmp_path))
+        with open(path) as fh:
+            assert json.load(fh)["provenance"]["spec_hash"] == \
+                res.experiment.spec_hash
+
+
+# ---------------------------------------------------------------------------
+# netsim integration satellites
+# ---------------------------------------------------------------------------
+
+
+class TestNetsimSatellites:
+    def test_scenarios_get_warns_but_works(self):
+        from repro.netsim import scenarios
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            sc = scenarios.get("baseline_uniform", steps=5)
+        assert sc.steps == 5
+
+    def test_measured_compute_reads_committed_baseline(self):
+        import json as _json
+        import os
+        from repro.netsim import scenarios
+        root = os.path.join(os.path.dirname(__file__), os.pardir)
+        path = os.path.join(root, "BENCH_throughput.json")
+        ct = scenarios.measured_compute("mlp_h64", "async", path=path)
+        sps = _json.load(open(path))["lanes"]["async/mlp_h64"]["fused"][
+            "steps_per_s"]
+        assert ct.mean_ms == pytest.approx(1000.0 / sps)
+
+    def test_measured_compute_unknown_lane(self):
+        from repro.netsim import scenarios
+        with pytest.raises((KeyError, FileNotFoundError)):
+            scenarios.measured_compute("mlp_h9999", "async")
+
+    def test_sync_variant_scenario_shapes(self):
+        from repro.netsim import ClusterSim, scenarios
+        sc = scenarios.build("baseline_uniform", variant="sync", n_workers=5,
+                             f_workers=1, steps=6)
+        assert sc.pull_need == 1 and sc.push_need == 5
+        t = ClusterSim(sc).run()
+        assert t.pull_idx.shape == (6, 5, 1)
+        assert t.push_idx.shape == (6, 5, 5)
+        assert t.shortfalls == 0
+        # round-robin pull: worker w at step k accepts server (w + k) % n_ps
+        for k in range(6):
+            for w in range(5):
+                assert t.pull_idx[k, w, 0] == (w + k) % sc.n_servers
+        # every server consumed every worker's gradient
+        for k in range(6):
+            for s in range(sc.n_servers):
+                assert sorted(t.push_idx[k, s].tolist()) == list(range(5))
+
+    def test_sync_closed_zero_row_not_refilled_as_shortfall(self):
+        """A sync pull row recording server 0 is a legitimately closed
+        quorum; a worker dying mid-compute afterwards must not make the
+        dead-row fill re-pad it (or count it as a shortfall)."""
+        from repro.netsim import ClusterSim, scenarios
+        from repro.netsim.faults import CrashPlan, CrashWindow, FaultPlan
+        # worker 0 (node id 5) pulls from server (0+0)%5 = 0 at step 0, then
+        # crashes during its gradient computation and never recovers
+        sc = scenarios.build(
+            "baseline_uniform", variant="sync", n_workers=5, f_workers=1,
+            steps=4, update_ms=0.1,
+            faults=FaultPlan(crashes=CrashPlan((
+                CrashWindow(node=5, t_down=1.5, t_up=float("inf")),))))
+        cs = ClusterSim(sc)
+        t = cs.run()
+        assert cs.pull_closed[0, 0]          # the [0] row was a real quorum
+        assert t.pull_idx[0, 0, 0] == 0
+        # the fill only padded the dead worker's NEVER-closed rows, each
+        # named after the round-robin server of that step
+        for k in range(1, sc.steps):
+            assert not cs.pull_closed[k, 0]
+            assert t.pull_idx[k, 0, 0] == k % sc.n_servers

@@ -17,7 +17,7 @@ SMALL = dict(n_workers=7, f_workers=2, n_servers=5, f_servers=1,
 
 
 def _run(name, **kw):
-    sc = scenarios.get(name, **{**SMALL, **kw})
+    sc = scenarios.build(name, **{**SMALL, **kw})
     return sc, ClusterSim(sc).run()
 
 
