@@ -21,18 +21,19 @@ netsim:
 agg-bench:
 	$(ENV) $(PY) -m benchmarks.run --only agg
 
-# perf lane: fused-engine throughput benchmark, gated (>25% fused steps/sec
-# regression fails) against the committed perf-trajectory baseline (which a
-# run never overwrites; refresh it deliberately with
+# perf lane: fused-engine throughput benchmark (incl. the protocol_naive /
+# protocol_sharded rows on the acceptance config), gated (>25% fused
+# steps/sec regression fails) against the committed perf-trajectory baseline
+# (which a run never overwrites; refresh it deliberately with
 # `python -m benchmarks.exp_throughput --seed-baseline`)
 perf:
 	$(ENV) $(PY) -m benchmarks.run --only throughput --compare BENCH_throughput.json
 
-# experiment-API smoke lane: one spec through all three runners (stepwise
-# oracle, fused engine, netsim trace), results + provenance under
-# results/benchmarks/exp_smoke_*.json
+# experiment-API smoke lane: one spec through all four runners (stepwise
+# oracle, fused engine, netsim trace, distributed protocol on a 1-device
+# mesh), results + provenance under results/benchmarks/exp_smoke_*.json
 exp:
-	$(ENV) $(PY) -m benchmarks.run --exp smoke --runners stepwise,fused,netsim
+	$(ENV) $(PY) -m benchmarks.run --exp smoke --runners stepwise,fused,netsim,protocol
 
 bench:
 	$(ENV) $(PY) -m benchmarks.run

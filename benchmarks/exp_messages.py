@@ -7,8 +7,15 @@ actual tensor sizes (documented deviation):
 per normal (scatter) step, per worker/server, d = model size in floats:
   async:  worker rx = q_ps * d (pull all, Median)   worker tx = n_ps * d
           server rx = q_w * d                       server tx = n_w * d
-  sync:   worker rx = 1 * d (round-robin + filters) worker tx = n_ps * d
+  sync:   worker rx = 1 * d (round-robin + filters) worker tx = 1 * d
+          server rx = n_w/n_ps * d                  server tx = n_w/n_ps * d
 plus the amortised DMC gather every T steps (n_ps^2 * d server exchange).
+
+The sync schedule is a round-robin request/reply *pair*: worker w sends its
+gradient to server (w + k) % n_ps only, which replies with its model —
+neither direction is a broadcast (the worker_tx n_ps·d -> 1·d correction
+flagged in ROADMAP; repro.netsim counts the same schedule, and exp_netsim's
+wallclock section logs the deviation vs the old broadcast accounting).
 
 Also cross-checked against the *measured* per-device collective bytes of the
 compiled distributed protocol (results/dryrun), which uses all-gathers instead
@@ -27,8 +34,8 @@ def model_bytes(d: int, n_w: int, n_ps: int, f_w: int, f_ps: int, T: int,
         "server_rx": q_w * D, "server_tx": n_w * D,
     }
     sync_step = {
-        "worker_rx": 1 * D, "worker_tx": n_ps * D,
-        "server_rx": n_w * D, "server_tx": n_w * D / n_ps,  # round-robin pulls
+        "worker_rx": 1 * D, "worker_tx": 1 * D,       # round-robin reply pair
+        "server_rx": n_w * D / n_ps, "server_tx": n_w * D / n_ps,
     }
     dmc = {"server_exchange": (n_ps - 1) * D + q_ps * D}
     tot_async = sum(async_step.values()) + dmc["server_exchange"] / T

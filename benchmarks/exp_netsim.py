@@ -56,6 +56,21 @@ def _wallclock(steps: int) -> dict:
                 d["tx_bytes"] for d in tot.values()) / (n_w * sc.steps),
             "totals": tot,
         }
+        if variant == "sync":
+            # the §5 byte-model correction: sync pushes are round-robin
+            # request/reply pairs (worker_tx = 1·d), not broadcasts
+            # (worker_tx = n_ps·d). Log counted-vs-model so the deviation the
+            # old accounting carried stays visible in the wallclock totals.
+            D = WALLCLOCK_MODEL_D * 4
+            counted = tot["push"]["tx_bytes"] / (n_w * sc.steps)
+            out[variant]["push_byte_model"] = {
+                "counted_worker_tx_per_step": counted,
+                "roundrobin_model": D,
+                "broadcast_model": sc.n_servers * D,
+                "deviation_vs_roundrobin": abs(counted - D) / D,
+                "deviation_vs_broadcast":
+                    abs(counted - sc.n_servers * D) / (sc.n_servers * D),
+            }
     a, s = out["async"], out["sync"]
     out["sync_speedup_wallclock"] = a["virtual_ms"] / s["virtual_ms"]
     out["sync_byte_saving"] = 1.0 - (s["tx_bytes_per_worker_step"]
@@ -130,6 +145,17 @@ def summarize(res: dict) -> str:
             f"{s['ms_per_step']:.2f} ms/step "
             f"(sync x{wc['sync_speedup_wallclock']:.2f} wall-clock, "
             f"{100*wc['sync_byte_saving']:.0f}% fewer bytes/worker-step)")
+        pm = s.get("push_byte_model")
+        if pm:
+            over = pm["broadcast_model"] / max(
+                pm["counted_worker_tx_per_step"], 1e-12)
+            lines.append(
+                f"  sync push byte model: counted "
+                f"{pm['counted_worker_tx_per_step']/1e3:.1f} kB/worker-step "
+                f"vs round-robin model {pm['roundrobin_model']/1e3:.1f} "
+                f"(dev {pm['deviation_vs_roundrobin']:.2%}); the old "
+                f"broadcast model {pm['broadcast_model']/1e3:.1f} "
+                f"overcounted x{over:.1f}")
     return "\n".join(lines)
 
 

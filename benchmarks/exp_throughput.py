@@ -13,6 +13,13 @@ problem end-to-end (data pipeline included) for the same number of steps:
   * ``fused`` — :class:`repro.core.engine.EpochEngine` with the device-side
     batch stream: whole epochs as one donated-buffer ``lax.scan`` dispatch.
 
+The acceptance config additionally runs the distributed protocol through
+``ProtocolEngine`` fused epochs on a mesh over the available devices —
+``protocol_naive`` vs ``protocol_sharded`` (the two collective engines, with
+their modeled per-step cross-'rep' collective volume attached) — so the
+multi-device path's steps/sec rides the same perf-trajectory file as the
+single-host engine.
+
 Wall-clock is measured with ``block_until_ready`` around interleaved
 best-of-``repeats`` trials (this container's CPU throttles erratically;
 interleaving + best-of keeps the *ratios* meaningful), and compile time is
@@ -87,6 +94,43 @@ def _stepwise_lane(variant: str, hidden: int, steps: int, seed_path: bool):
     return compile_s, trial
 
 
+def _protocol_lane(hidden: int, steps: int, epoch_steps: int, engine: str):
+    """(compile_s, trial_fn, volume_bytes) for the distributed protocol's
+    fused epochs (G = 5 groups on a mesh over the available devices)."""
+    from repro.core import protocol as proto
+    from repro.launch.mesh import make_protocol_mesh
+
+    e = Experiment(name=f"throughput_protocol_{engine}_h{hidden}",
+                   n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+                   T=T, batch=BATCH, model=f"mlp_h{hidden}",
+                   runner="protocol", protocol_engine=engine)
+    pcfg = e.to_protocol_config()
+    init, loss, _ = e.build_problem()
+    bundle = proto.ProblemBundle(init=init, loss=loss)
+    mesh = make_protocol_mesh(pcfg.n_groups)
+    eng = proto.ProtocolEngine(bundle, pcfg, e.build_schedule(), mesh=mesh)
+    n_params = sum(l.size for l in jax.tree.leaves(
+        jax.eval_shape(init, jax.random.PRNGKey(0))))
+
+    def one_run():
+        state = eng.init_state(jax.random.PRNGKey(0))
+        stream = DeviceBatchStream(0, DEFAULT_MIX, pcfg.n_groups, BATCH)
+        t0 = time.time()
+        state, _ = eng.run(state, stream=stream, steps=steps,
+                           epoch_steps=epoch_steps)
+        jax.block_until_ready(state.params)
+        return steps / (time.time() - t0)
+
+    state = eng.init_state(jax.random.PRNGKey(0))
+    stream = DeviceBatchStream(0, DEFAULT_MIX, pcfg.n_groups, BATCH)
+    t0 = time.time()
+    state, _ = eng.run(state, stream=stream, steps=epoch_steps,
+                       epoch_steps=epoch_steps)
+    jax.block_until_ready(state.params)
+    compile_s = time.time() - t0
+    return compile_s, one_run, proto.collective_volume_bytes(pcfg, n_params)
+
+
 def _fused_lane(variant: str, hidden: int, steps: int, epoch_steps: int):
     cfg, sim = _build(variant, hidden)
     eng = EpochEngine(sim)
@@ -124,25 +168,57 @@ def run(quick: bool = True):
            "epoch_steps": epoch_steps, "lanes": {}}
     for variant, mname, hidden in configs:
         key = f"{variant}/{mname}"
-        lane_fns, compile_s = {}, {}
+        lane_fns, compile_s, volumes = {}, {}, {}
         compile_s["seed_loop"], lane_fns["seed_loop"] = _stepwise_lane(
             variant, hidden, steps, seed_path=True)
         compile_s["stepwise"], lane_fns["stepwise"] = _stepwise_lane(
             variant, hidden, steps, seed_path=False)
         compile_s["fused"], lane_fns["fused"] = _fused_lane(
             variant, hidden, steps, epoch_steps)
+        if key == ACCEPTANCE_KEY:
+            # the distributed protocol rides the acceptance config: both
+            # collective engines, interleaved with the single-host lanes
+            for engine in ("naive", "sharded"):
+                name = f"protocol_{engine}"
+                compile_s[name], lane_fns[name], volumes[name] = \
+                    _protocol_lane(hidden, steps, epoch_steps, engine)
         trials = {name: [] for name in lane_fns}
         for _ in range(repeats):          # interleaved: same machine state
             for name, fn in lane_fns.items():
                 trials[name].append(fn())
+        # the protocol rows are an order of magnitude faster per trial than
+        # the stepwise loops, so their best-of is noisier: give them extra
+        # interleaved rounds (on a 1-device mesh the two collective engines
+        # compile to near-identical programs — no wire to differ on)
+        for _ in range(2 * repeats):
+            for name, fn in lane_fns.items():
+                if name.startswith("protocol_"):
+                    trials[name].append(fn())
         entry = {name: {"steps_per_s": max(v), "trials": v,
                         "compile_s": compile_s[name]}
                  for name, v in trials.items()}
+        for name, vol in volumes.items():
+            entry[name]["collective_bytes_per_step"] = vol
         entry["speedup_vs_stepwise"] = (entry["fused"]["steps_per_s"] /
                                         entry["stepwise"]["steps_per_s"])
         entry["speedup_vs_seed_loop"] = (entry["fused"]["steps_per_s"] /
                                          entry["seed_loop"]["steps_per_s"])
         out["lanes"][key] = entry
+
+    pl = out["lanes"][ACCEPTANCE_KEY]
+    out["protocol"] = {
+        "config": ACCEPTANCE_KEY, "n_groups": 5,
+        "naive_sps": pl["protocol_naive"]["steps_per_s"],
+        "sharded_sps": pl["protocol_sharded"]["steps_per_s"],
+        "sharded_over_naive": (pl["protocol_sharded"]["steps_per_s"] /
+                               pl["protocol_naive"]["steps_per_s"]),
+        "sharded_ge_naive": bool(pl["protocol_sharded"]["steps_per_s"] >=
+                                 pl["protocol_naive"]["steps_per_s"]),
+        "naive_collective_bytes_per_step":
+            pl["protocol_naive"]["collective_bytes_per_step"],
+        "sharded_collective_bytes_per_step":
+            pl["protocol_sharded"]["collective_bytes_per_step"],
+    }
 
     acc = out["lanes"][ACCEPTANCE_KEY]
     out["acceptance"] = {
@@ -170,6 +246,15 @@ def summarize(res: dict) -> str:
             f"({e['speedup_vs_seed_loop']:.1f}x vs seed, "
             f"{e['speedup_vs_stepwise']:.1f}x vs stepwise; "
             f"compile {e['fused']['compile_s']:.1f}s)")
+    p = res.get("protocol")
+    if p:
+        lines.append(
+            f"  protocol [{p['config']}, G={p['n_groups']}]: naive "
+            f"{p['naive_sps']:.1f} vs sharded {p['sharded_sps']:.1f} steps/s "
+            f"(x{p['sharded_over_naive']:.2f}); modeled collective volume "
+            f"{p['naive_collective_bytes_per_step']/1e6:.2f} vs "
+            f"{p['sharded_collective_bytes_per_step']/1e6:.2f} MB/step — "
+            f"{'OK' if p['sharded_ge_naive'] else 'CHECK'} (sharded >= naive)")
     a = res["acceptance"]
     lines.append(f"  acceptance [{a['config']}]: fused {a['fused_sps']:.1f} "
                  f"steps/s = {a['speedup_vs_seed_loop']:.1f}x the seed loop "

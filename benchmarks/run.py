@@ -3,14 +3,19 @@
     python -m benchmarks.run [--full] [--only name,...]      # figure lanes
     python -m benchmarks.run --list                          # what exists
     python -m benchmarks.run --exp smoke --override steps=30 # any spec
-    python -m benchmarks.run --exp smoke --runners stepwise,fused,netsim
+    python -m benchmarks.run --exp smoke \
+        --runners stepwise,fused,netsim,protocol
+    python -m benchmarks.run --exp smoke --store             # sweep cache
 
 Figure lanes run one experiment per paper figure/claim (reduced sizes by
 default; --full runs paper-scale step counts) plus the roofline table from
 the dry-run artifacts when present. ``--exp`` runs a ``repro.exp`` preset
 (with ``--override key=val`` field overrides) through one or more runners and
 writes each RunResult verbatim. Every result JSON carries a ``provenance``
-block (spec hash, git sha, jax version, device).
+block (spec hash, git sha, jax version, device). ``--store`` additionally
+appends the results to the spec-hash-keyed store (``benchmarks/store.py``):
+identical (spec_hash, runner, git_sha) entries dedupe, metric drift vs the
+stored run is diffed and printed.
 """
 from __future__ import annotations
 
@@ -66,6 +71,12 @@ def run_preset(args) -> None:
         print(res.summary())
         path = exp.write_result(res, out_dir=args.out)
         print(f"  -> {path}")
+        if args.store:
+            from benchmarks import store
+            status, drift = store.store(res.to_dict())
+            print(f"  store[{res.experiment.spec_hash}/{runner}]: {status}")
+            for line in drift:
+                print(f"    drift vs stored: {line}")
 
 
 def main():
@@ -82,8 +93,13 @@ def main():
                     metavar="KEY=VAL",
                     help="Experiment field override (repeatable)")
     ap.add_argument("--runners", default=None,
-                    help="comma list for --exp (e.g. stepwise,fused,netsim); "
-                    "default: the preset's declared runner")
+                    help="comma list for --exp (e.g. stepwise,fused,netsim,"
+                    "protocol); default: the preset's declared runner")
+    ap.add_argument("--store", action="store_true",
+                    help="with --exp: append each RunResult to "
+                    "results/store.jsonl keyed on provenance.spec_hash, "
+                    "deduping identical (spec_hash, runner, git_sha) entries "
+                    "and printing a diff when metrics drift")
     ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
                     help="after the throughput experiment, fail (exit 1) on "
                     "a fused steps/sec regression beyond --compare-tol vs "

@@ -1,0 +1,103 @@
+"""Spec-hash-keyed result store — a sweep cache / regression tracker.
+
+``python -m benchmarks.run --exp NAME --store`` appends each ``RunResult``
+(as its ``to_dict()`` JSON) to ``results/store.jsonl``, one entry per line,
+keyed on ``(provenance.spec_hash, experiment.runner, provenance.git_sha)``:
+
+* an entry whose key already exists with the **same final metrics** is a
+  duplicate and is skipped (re-running a sweep point costs no store growth);
+* same key but **drifting metrics** (same spec, same code revision, different
+  numbers — nondeterminism or an environment change) replaces the stored
+  entry and the diff is printed so the drift is never silent;
+* a new ``git_sha`` is a new key, so the store accumulates the metric
+  trajectory of every spec across revisions — ``diff vs stored`` is exactly
+  what a regression gate reads.
+
+``wall_s`` and the netsim accounting are stored but excluded from the drift
+comparison (timing wobbles are not metric drift).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+STORE_PATH = os.path.join("results", "store.jsonl")
+
+#: relative tolerance for "same metrics" (floats travel through JSON)
+DRIFT_RTOL = 1e-6
+
+
+def entry_key(entry: dict) -> tuple:
+    """(spec_hash, runner, git_sha) — the dedupe/diff identity."""
+    prov = entry.get("provenance", {})
+    return (prov.get("spec_hash"), entry.get("experiment", {}).get("runner"),
+            prov.get("git_sha"))
+
+
+def load(path: str = STORE_PATH) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def _close(a, b) -> bool:
+    if isinstance(a, float) or isinstance(b, float):
+        try:
+            a, b = float(a), float(b)
+        except (TypeError, ValueError):
+            return a == b
+        return abs(a - b) <= DRIFT_RTOL * max(abs(a), abs(b), 1e-12)
+    return a == b
+
+
+def metric_diff(stored: dict, new: dict) -> list[str]:
+    """Human-readable drift lines between two entries' final metrics (and
+    logged curves); empty = identical within tolerance."""
+    out = []
+    sf, nf = stored.get("final", {}), new.get("final", {})
+    for k in sorted(set(sf) | set(nf)):
+        if k not in sf or k not in nf:
+            out.append(f"final.{k}: {sf.get(k)!r} -> {nf.get(k)!r}")
+        elif not _close(sf[k], nf[k]):
+            out.append(f"final.{k}: {sf[k]} -> {nf[k]}")
+    slog, nlog = stored.get("logs", []), new.get("logs", [])
+    if len(slog) != len(nlog):
+        out.append(f"logs: {len(slog)} -> {len(nlog)} entries")
+    else:
+        for i, (a, b) in enumerate(zip(slog, nlog)):
+            bad = [k for k in sorted(set(a) | set(b))
+                   if not _close(a.get(k), b.get(k))]
+            if bad:
+                out.append(f"logs[{i}] (step {a.get('step', i)}): "
+                           + ", ".join(f"{k} {a.get(k)} -> {b.get(k)}"
+                                       for k in bad))
+    return out
+
+
+def store(entry: dict, path: str = STORE_PATH) -> tuple[str, list[str]]:
+    """Insert ``entry`` (a ``RunResult.to_dict()``); returns
+    ``(status, drift_lines)`` with status one of ``"appended"`` (new key),
+    ``"duplicate"`` (identical entry already stored — store untouched) or
+    ``"updated"`` (same key, metrics drifted — entry replaced)."""
+    key = entry_key(entry)
+    entries = load(path)
+    for i, old in enumerate(entries):
+        if entry_key(old) == key:
+            drift = metric_diff(old, entry)
+            if not drift:
+                return "duplicate", []
+            entries[i] = entry
+            _write(entries, path)
+            return "updated", drift
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as fh:
+        fh.write(json.dumps(entry, default=float) + "\n")
+    return "appended", []
+
+
+def _write(entries: list[dict], path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        for e in entries:
+            fh.write(json.dumps(e, default=float) + "\n")

@@ -26,67 +26,30 @@ gather/DMC step applied inline at the T-step boundary:
   model), so parameter sweeps that rebuild simulators per point reuse the
   compiled epoch instead of re-tracing.
 
+The cache machinery, the donated-epoch dispatch and the chunked ``run`` loop
+live in :mod:`repro.core.epochs` (shared with the distributed
+:class:`repro.core.protocol.ProtocolEngine`, which applies the same treatment
+to the replica-sharded multi-device path); this module keeps the single-host
+step body and its metric plumbing.
+
 ``benchmarks/exp_throughput.py`` measures the resulting steps/sec against the
 per-step loop and records the repo's perf trajectory baseline.
 """
 from __future__ import annotations
 
-import functools
-import warnings
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from ..agg import dispatch as _agg_dispatch
 from ..agg import rules as _agg_rules
-from .quorum import UniformDelivery
+from .epochs import (EpochRunner, clear_epoch_cache,  # noqa: F401 (re-export)
+                     delivery_cache_key, epoch_cache_size, fn_cache_key,
+                     stack_batches)
 from .simulator import (ByzSGDSimulator, SimState, _tree_take,
                         coordinatewise_diameter_sum, l2_diameter, tree_gnorm)
-
-
-def fn_cache_key(fn: Callable | None) -> tuple:
-    """A hashable key identifying a callable's *semantics* for compile-cache
-    reuse. ``functools.partial`` trees and callables exposing ``cache_key``
-    (the repro.optim.schedules factories) key structurally — two sweep points
-    built from the same factory with equal arguments share an executable.
-    Anything else keys on object identity (always correct, never shared)."""
-    if fn is None:
-        return ("none",)
-    ck = getattr(fn, "cache_key", None)
-    if ck is not None:
-        return ("ck", ck)
-    if isinstance(fn, functools.partial):
-        return ("partial", fn_cache_key(fn.func), fn.args,
-                tuple(sorted(fn.keywords.items())))
-    return ("fn", fn)
-
-
-def delivery_cache_key(delivery) -> tuple:
-    """UniformDelivery keys structurally; trace-backed models carry device
-    arrays and key on identity."""
-    if isinstance(delivery, UniformDelivery):
-        return ("uniform", delivery.n_workers, delivery.n_servers,
-                delivery.q_workers, delivery.q_servers)
-    return (type(delivery).__name__, id(delivery))
-
-
-# Semantic-key -> jitted epoch executable. Entries close over their simulator
-# (and, for TraceDelivery, its staged trace arrays), so the cache is bounded:
-# oldest entries are evicted past _EPOCH_CACHE_MAX to keep long sweeps over
-# identity-keyed deliveries from pinning memory for the process lifetime.
-_EPOCH_CACHE: dict[Any, Callable] = {}
-_EPOCH_CACHE_MAX = 64
-
-
-def epoch_cache_size() -> int:
-    return len(_EPOCH_CACHE)
-
-
-def clear_epoch_cache() -> None:
-    _EPOCH_CACHE.clear()
 
 
 def _make_epoch_fn(sim: ByzSGDSimulator, acc_fn: Callable | None,
@@ -151,7 +114,7 @@ def _make_epoch_fn(sim: ByzSGDSimulator, acc_fn: Callable | None,
     return jax.jit(epoch, donate_argnums=(0,))
 
 
-class EpochEngine:
+class EpochEngine(EpochRunner):
     """Compiled epoch runner around a :class:`ByzSGDSimulator`.
 
     ``acc_fn(params, eval_x, eval_y)`` enables per-step accuracy against the
@@ -194,74 +157,14 @@ class EpochEngine:
                 fn_cache_key(self.sim.loss_fn), fn_cache_key(self.sim.lr),
                 delivery_cache_key(self.sim.delivery), *self._flags())
 
-    def _get_or_build(self) -> Callable:
-        try:
-            key = self._cache_key()
-            hash(key)
-        except TypeError:  # unhashable closure args: private executable
-            key = ("epoch-inst", id(self.sim), *self._flags())
-        fn = _EPOCH_CACHE.get(key)
-        if fn is None:
-            fn = _make_epoch_fn(self.sim, self.acc_fn, self.track_delta,
-                                self.track_gnorm, self.metrics_every)
-            while len(_EPOCH_CACHE) >= _EPOCH_CACHE_MAX:
-                _EPOCH_CACHE.pop(next(iter(_EPOCH_CACHE)))
-            _EPOCH_CACHE[key] = fn
-        return fn
+    def _instance_key(self):
+        return ("epoch-inst", id(self.sim), *self._flags())
 
-    # -- epoch-at-a-time API -------------------------------------------------
-    def run_epoch(self, state: SimState, batches) -> tuple[SimState, dict]:
-        """One compiled epoch over ``batches`` (leaves ``[L, n_w, ...]``).
-        ``state`` is donated. Metrics stay on device (dict of ``[L]`` bufs)."""
-        ex, ey = self.eval_set if self.eval_set is not None else (
-            jnp.zeros(()), jnp.zeros(()))
-        with warnings.catch_warnings():
-            # donation is a no-op on CPU; keep that per-executable warning out
-            # of benchmark output without touching the global filter state
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            return self._epoch(state, batches, ex, ey)
+    def _build(self):
+        return _make_epoch_fn(self.sim, self.acc_fn, self.track_delta,
+                              self.track_gnorm, self.metrics_every)
 
-    # -- full-run API --------------------------------------------------------
-    def run(self, state: SimState, batches=None, *, stream=None,
-            steps: int | None = None, epoch_steps: int | None = None
-            ) -> tuple[SimState, dict[str, np.ndarray]]:
-        """Run ``steps`` protocol steps in compiled epochs.
-
-        Feed either ``batches`` — a pytree with ``[steps, n_w, ...]`` leaves —
-        or ``stream`` — an object with ``next(L)`` returning device batches
-        (see ``DeviceBatchStream``). ``epoch_steps`` sets the scan length per
-        dispatch (default: ``cfg.T``); any value is correct because the gather
-        boundary is driven by the carried step counter, not the chunking.
-        Returns the final state and the host metrics buffers (one transfer).
-        """
-        if (batches is None) == (stream is None):
-            raise ValueError("provide exactly one of batches/stream")
-        if steps is None:
-            if batches is None:
-                raise ValueError("steps is required with stream input")
-            steps = jax.tree.leaves(batches)[0].shape[0]
-        L = epoch_steps or self.cfg.T
-        bufs, done = [], 0
-        while done < steps:
-            n = min(L, steps - done)
-            if batches is not None:
-                chunk = jax.tree.map(lambda l: l[done:done + n], batches)
-            else:
-                chunk = stream.next(n)
-            state, mbuf = self.run_epoch(state, chunk)
-            bufs.append(mbuf)
-            done += n
-        if not bufs or not bufs[0]:
-            return state, {}
-        host = jax.device_get(bufs)  # ONE device->host transfer
-        metrics = {k: np.concatenate([np.asarray(b[k]) for b in host])
-                   for k in host[0]}
-        return state, metrics
-
-
-def stack_batches(batch_iter) -> Any:
-    """Stack a host batch iterable into the ``[steps, ...]`` pytree the engine
-    consumes (for driving the engine from a legacy host stream in tests)."""
-    batches = list(batch_iter)
-    return jax.tree.map(lambda *ls: jnp.stack(ls), *batches)
+    def _extra_args(self):
+        if self.eval_set is not None:
+            return self.eval_set
+        return (jnp.zeros(()), jnp.zeros(()))

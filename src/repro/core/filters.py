@@ -43,10 +43,19 @@ def lipschitz_coefficient(new_grad, old_grad, local_model, old_model) -> jax.Arr
     return num / jnp.maximum(den, 1e-20)
 
 
+def lipschitz_cutoff(hist: LipschitzHistory, n_ps: int, f_ps: int) -> jax.Array:
+    """The (n_ps-f_ps)/n_ps empirical quantile of the recorded history (NaN
+    while the history is empty = accept everything). Split out from
+    :func:`lipschitz_pass` so the sync-variant probe loop computes the cutoff
+    ONCE per worker per step instead of re-sorting the history buffer for
+    every probed candidate."""
+    qlevel = 100.0 * (n_ps - f_ps) / n_ps
+    return jnp.nanpercentile(hist.buf, qlevel)
+
+
 def lipschitz_pass(k: jax.Array, hist: LipschitzHistory, n_ps: int, f_ps: int) -> jax.Array:
     """k <= quantile_{(n_ps-f_ps)/n_ps}{K}. Accepts while history is empty."""
-    qlevel = 100.0 * (n_ps - f_ps) / n_ps
-    kp = jnp.nanpercentile(hist.buf, qlevel)
+    kp = lipschitz_cutoff(hist, n_ps, f_ps)
     return jnp.isnan(kp) | (k <= kp)
 
 

@@ -13,9 +13,13 @@ of the production mesh (launch/mesh.py):
                   -> local SGD update.
   * gather step   = DMC: masked Median across server replicas (every T steps).
 
-Asynchrony = per-step delivery quorums (core/quorum.py). Byzantine behaviour is
-injected for tests/benchmarks and *excluded from roofline lowers* (a real
-adversary costs nothing extra on the honest path).
+Asynchrony = per-step delivery quorums: every step builder takes a pluggable
+``DeliveryModel`` (core/quorum.py) — ``UniformDelivery`` (Assumption 7, the
+default, with the *same* PRNG chain as the single-host simulator so the
+1-device protocol is oracle-checked against it) or a netsim ``TraceDelivery``
+replaying realized quorums. Byzantine behaviour is injected for
+tests/benchmarks and *excluded from roofline lowers* (a real adversary costs
+nothing extra on the honest path).
 
 Engines:
   * 'naive'   — baseline, paper-faithful collective volume: gradients/replicas
@@ -26,22 +30,31 @@ Engines:
     (XLA lowers to reduce-scatter/all-reduce, ~2P per step) and the MDA subset
     selection is driven by the leaf-partial Gram matrix (exact distances, tiny
     [G,G] psum). See DESIGN.md §2 and EXPERIMENTS.md §Perf.
+
+:class:`ProtocolEngine` gives the protocol the fused-epoch treatment of
+``repro.core.engine`` (shared scaffolding in ``repro.core.epochs``): donated
+``lax.scan`` epochs with the DMC gather at the T-boundary via ``lax.cond`` on
+the carried counter, per-group metrics reduced on device, and the bounded
+semantic compile cache. ``repro.exp.run(spec.replace(runner="protocol"))``
+drives it; the single-host ``EpochEngine`` is its correctness oracle
+(tests/test_protocol_engine.py).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import agg
+from ..agg import dispatch as _agg_dispatch
+from ..agg import rules as _agg_rules
 from .attacks import ByzantineSpec, inject_gradients, inject_models
-from .quorum import receiver_quorum_indices
-from ..models.unroll_ctx import map_1 as umap
+from .epochs import EpochRunner, delivery_cache_key, fn_cache_key
+from .quorum import UniformDelivery
 
 # ---------------------------------------------------------------------------
 # config
@@ -63,7 +76,8 @@ class ProtocolConfig:
                                   # collective-permute + distance filter)
     gar: str = "mda"              # worker-gradient rule (selection-based:
                                   # aggregation = weights over 'rep')
-    pull_gar: str = "median"      # model rule for the masked pull / DMC
+    pull_gar: str = "median"      # model rule for the masked worker pull
+    gather_gar: str = "median"    # model rule for the DMC gather
     exchange_dtype: str = "float32"
     mda_exact_limit: int = 200_000
     chunk_bytes: int = 256 * 2**20   # stream leaves bigger than this over dim 1
@@ -82,32 +96,46 @@ class ProtocolConfig:
         # masked_pull applies the rule per leaf chunk, so it must be a
         # coordinate-wise (leafwise) rule with a traced-mask implementation;
         # selection rules would pick a different sender subset per leaf.
-        pspec = agg.get(self.pull_gar)
-        if pspec.tree_mode != "leafwise" or pspec.masked_fn is None:
-            ok = [s.name for s in agg.specs()
-                  if s.tree_mode == "leafwise" and s.masked_fn is not None]
-            raise ValueError(f"pull_gar={self.pull_gar!r} must be a "
-                             f"coordinate-wise rule with traced-mask support; "
-                             f"have {ok}")
-        pspec.validate(self.q_servers, self.f_servers)
+        for role in ("pull_gar", "gather_gar"):
+            name = getattr(self, role)
+            pspec = agg.get(name)
+            if pspec.tree_mode != "leafwise" or pspec.masked_fn is None:
+                ok = [s.name for s in agg.specs()
+                      if s.tree_mode == "leafwise" and s.masked_fn is not None]
+                raise ValueError(f"{role}={name!r} must be a "
+                                 f"coordinate-wise rule with traced-mask "
+                                 f"support; have {ok}")
+            pspec.validate(self.q_servers, self.f_servers)
 
     @staticmethod
     def derive(R: int, divisor: int = 1, *, T: int = 50, engine: str = "sharded",
                exchange_dtype: str = "float32", grad_microbatches: int = 1,
-               pull: str = "median",
-               byz: ByzantineSpec | None = None) -> "ProtocolConfig":
-        """Default resilience parameters for G = R // divisor groups:
-        f_w = (G-1)//3, f_ps = (G-2)//3 (the paper's asymptotically-optimal 1/3
-        bounds), full-minus-f quorums."""
+               pull: str = "median", byz: ByzantineSpec | None = None,
+               f_workers: int | None = None, f_servers: int | None = None,
+               q_workers: int | None = None, q_servers: int | None = None,
+               gar: str = "mda", pull_gar: str = "median",
+               gather_gar: str = "median",
+               mda_exact_limit: int = 200_000) -> "ProtocolConfig":
+        """Resilience parameters for G = R // divisor groups.
+
+        Defaults: f_w = (G-1)//3, f_ps = (G-2)//3 (the paper's
+        asymptotically-optimal 1/3 bounds) and full-minus-f quorums. Explicit
+        ``f_*``/``q_*``/GAR overrides let ``Experiment.to_protocol_config``
+        lower a declared cluster shape exactly (so the 1-device protocol and
+        the single-host simulator draw identical quorums)."""
         G = R // divisor
-        f_w = max((G - 1) // 3, 0)
-        f_ps = max((G - 2) // 3, 0)
-        q_w = G - f_w
-        q_ps = max(G - f_ps, min(2 * f_ps + 2, G))
+        f_w = max((G - 1) // 3, 0) if f_workers is None else f_workers
+        f_ps = max((G - 2) // 3, 0) if f_servers is None else f_servers
+        q_w = (G - f_w) if q_workers is None else q_workers
+        q_ps = (max(G - f_ps, min(2 * f_ps + 2, G)) if q_servers is None
+                else q_servers)
         return ProtocolConfig(n_groups=G, f_workers=f_w, f_servers=f_ps,
                               q_workers=q_w, q_servers=q_ps, T=T, engine=engine,
                               exchange_dtype=exchange_dtype,
                               grad_microbatches=grad_microbatches, pull=pull,
+                              gar=gar, pull_gar=pull_gar,
+                              gather_gar=gather_gar,
+                              mda_exact_limit=mda_exact_limit,
                               byz=byz or ByzantineSpec())
 
 
@@ -350,15 +378,16 @@ def _leaf_stream(fn, chunk_bytes: int, mesh=None):
 # ---------------------------------------------------------------------------
 
 
-def masked_pull(params, masks, cfg: ProtocolConfig, mesh=None):
+def masked_pull(params, masks, cfg: ProtocolConfig, mesh=None, rule=None):
     """Per-receiver masked aggregation over the replica axis.
 
     params leaves [G, ...]; masks [G_recv, G_send] bool. Returns leaves
     [G_recv, ...] — worker/server g's aggregated view of the replicas.
-    The rule is ``cfg.pull_gar`` (any registered rule with traced-mask
-    support), the paper's Median by default.
+    The rule defaults to ``cfg.pull_gar`` (any registered rule with
+    traced-mask support), the paper's Median; the DMC gather passes
+    ``cfg.gather_gar``.
     """
-    spec = agg.get(cfg.pull_gar)
+    spec = agg.get(rule or cfg.pull_gar)
 
     def med_chunk(chunk):  # [G, ...]
         def one(mask):
@@ -531,9 +560,18 @@ def make_init_fn(bundle, pcfg: ProtocolConfig):
 
 
 def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
-                      with_attack: bool = False, mesh=None):
-    """One ByzSGD scatter step. batch leaves: [G, per_group, ...]."""
+                      with_attack: bool = False, mesh=None, delivery=None):
+    """One ByzSGD scatter step. batch leaves: [G, per_group, ...].
+
+    ``delivery`` is a :class:`~repro.core.quorum.DeliveryModel`; the default
+    ``UniformDelivery`` over G-of-G nodes draws the same quorums (same key
+    chain and split order) as the single-host simulator's scatter step, which
+    is what makes the simulator the protocol's oracle. A netsim
+    ``TraceDelivery`` replays realized quorums instead.
+    """
     G = pcfg.n_groups
+    delivery = delivery or UniformDelivery(G, G, pcfg.q_workers,
+                                           pcfg.q_servers)
 
     overrides = attn_overrides(bundle.cfg, mesh) if mesh is not None else {}
 
@@ -552,7 +590,10 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
         return jax.tree_util.tree_unflatten(treedef, out)
 
     def scatter_step(state: ByzState, batch):
-        key, k_pull, k_push, k_matk, k_gatk = jax.random.split(state.key, 5)
+        # split order matches ByzSGDSimulator.scatter_step exactly, so with
+        # UniformDelivery and identical init the two paths draw the same
+        # quorums step for step (the oracle equivalence)
+        key, k_pull, k_matk, k_push, k_gatk = jax.random.split(state.key, 5)
         eta = lr_schedule(state.t).astype(jnp.float32)
 
         # 1. worker pull ------------------------------------------------------
@@ -589,7 +630,7 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
                     ok.reshape((G,) + (1,) * (p.ndim - 1)), p, o), pulled, own)
         else:
             # asynchronous variant: masked Median over the delivered quorum
-            pull_idx = receiver_quorum_indices(k_pull, G, G, pcfg.q_servers)
+            pull_idx = delivery.pull_indices(k_pull, state.t)
             pull_masks = jnp.zeros((G, G), bool).at[
                 jnp.arange(G)[:, None], pull_idx].set(True)
             pulled = masked_pull(models, pull_masks, pcfg, mesh)
@@ -629,7 +670,7 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
             grads = inject_gradients(grads, pcfg.byz, k_gatk)
 
         # 3. gradient rule (MDA by default) per server group over its quorum ---
-        push_idx = receiver_quorum_indices(k_push, G, G, pcfg.q_workers)
+        push_idx = delivery.push_indices(k_push, state.t)
         d2 = agg.rules.sqdists_from_gram(tree_gram(grads, mesh))
         weights = quorum_weights(d2, push_idx, pcfg.f_workers, pcfg)
         g_hat = aggregate_gradients(grads, weights, pcfg, mesh)
@@ -645,19 +686,22 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
 
 
 def make_gather_step(pcfg: ProtocolConfig, with_attack: bool = False,
-                     mesh=None):
-    """DMC: servers exchange replicas and apply masked Median (every T steps)."""
+                     mesh=None, delivery=None):
+    """DMC: servers exchange replicas and apply the masked ``gather_gar``
+    (Median by default) every T steps."""
     G = pcfg.n_groups
+    delivery = delivery or UniformDelivery(G, G, pcfg.q_workers,
+                                           pcfg.q_servers)
 
     def gather_step(state: ByzState):
         key, k_q, k_atk = jax.random.split(state.key, 3)
-        idx = receiver_quorum_indices(k_q, G, G, pcfg.q_servers,
-                                      include_self=True)
+        idx = delivery.gather_indices(k_q, state.t)
         masks = jnp.zeros((G, G), bool).at[jnp.arange(G)[:, None], idx].set(True)
         models = state.params
         if with_attack and pcfg.byz.server_attack:
             models = inject_models(models, pcfg.byz, k_atk)
-        new_params = masked_pull(models, masks, pcfg, mesh)
+        new_params = masked_pull(models, masks, pcfg, mesh,
+                                 rule=pcfg.gather_gar)
         new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
                                   new_params, state.params)
         return ByzState(params=new_params, t=state.t, key=key)
@@ -666,10 +710,13 @@ def make_gather_step(pcfg: ProtocolConfig, with_attack: bool = False,
 
 
 def make_train_step(bundle, pcfg: ProtocolConfig, lr_schedule,
-                    with_attack: bool = False, mesh=None):
+                    with_attack: bool = False, mesh=None, delivery=None):
     """Fused step: scatter, then DMC gather iff t % T == 0 (lax.cond)."""
-    scatter = make_scatter_step(bundle, pcfg, lr_schedule, with_attack, mesh)
-    gather = make_gather_step(pcfg, with_attack, mesh)
+    delivery = delivery or UniformDelivery(
+        pcfg.n_groups, pcfg.n_groups, pcfg.q_workers, pcfg.q_servers)
+    scatter = make_scatter_step(bundle, pcfg, lr_schedule, with_attack, mesh,
+                                delivery)
+    gather = make_gather_step(pcfg, with_attack, mesh, delivery)
 
     def train_step(state: ByzState, batch):
         state = scatter(state, batch)
@@ -705,3 +752,169 @@ def consolidate(params, pcfg: ProtocolConfig, chunk_bytes: int | None = None):
         return chunk_fn(leaf)
 
     return jax.tree.map(med, params)
+
+
+# ---------------------------------------------------------------------------
+# fused epoch engine over the protocol (repro.core.epochs scaffolding)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _ProblemCfg:
+    """Dtype carrier for paper-scale problems driven through the protocol
+    step builders (the LM path passes full model-bundle configs instead)."""
+    param_dtype: str = "float32"
+    act_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class ProblemBundle:
+    """Minimal bundle adapter: wraps an ``(init_fn, loss_fn)`` problem (the
+    repro.configs.paper_models factories) into the ``bundle`` interface the
+    protocol step builders expect (``init``/``loss``/``cfg`` dtypes)."""
+    init: Callable
+    loss: Callable
+    cfg: _ProblemCfg = field(default_factory=_ProblemCfg)
+
+
+class ProtocolEngine(EpochRunner):
+    """Fused multi-device epochs over the distributed ByzSGD protocol.
+
+    The same scan/donation treatment ``repro.core.engine.EpochEngine`` gives
+    the single-host simulator, applied to the replica-stacked (and, with a
+    mesh, 'rep'-sharded) :class:`ByzState` for BOTH collective engines
+    ('naive' | 'sharded'): one donated ``lax.scan`` per epoch whose body runs
+    the scatter step and applies the DMC gather when the carried counter hits
+    a multiple of T (``lax.cond`` — chunk lengths and run tails stay correct),
+    with per-group metrics (accuracy on group 0's replica, the Lemma-4.2/4.3
+    diameters) reduced on device into the scan's output buffers — ONE host
+    transfer per ``run``.
+
+    Epoch executables share the bounded semantic compile cache of
+    ``repro.core.epochs`` (keyed on ProtocolConfig + loss/lr cache keys +
+    delivery + mesh + metric flags), so spec sweeps over the protocol runner
+    reuse compiled epochs. With the default ``UniformDelivery`` and
+    ``pull="median"`` (the asynchronous schedule) the engine draws the same
+    quorums as ``ByzSGDSimulator`` — the single-host engine is its oracle
+    (params allclose, metrics identical on a 1-device mesh). The
+    ``pull="roundrobin"`` mode is the protocol's own §5 collective
+    formulation (ring permutation + distance filter); it is NOT oracle-matched
+    against the simulator's sync filter variant.
+    """
+
+    def __init__(self, bundle, pcfg: ProtocolConfig, lr_schedule, *,
+                 mesh=None, delivery=None, with_attack: bool = False,
+                 acc_fn: Callable | None = None, eval_set: tuple | None = None,
+                 track_delta: bool = False, metrics_every: int = 1):
+        if (acc_fn is None) != (eval_set is None):
+            raise ValueError("acc_fn and eval_set must be given together")
+        if metrics_every < 1:
+            raise ValueError("metrics_every must be >= 1")
+        self.bundle = bundle
+        self.cfg = pcfg
+        self.lr = lr_schedule
+        self.mesh = mesh
+        self.with_attack = with_attack
+        self.delivery = delivery or UniformDelivery(
+            pcfg.n_groups, pcfg.n_groups, pcfg.q_workers, pcfg.q_servers)
+        self.acc_fn = acc_fn
+        self.eval_set = eval_set
+        self.track_delta = track_delta
+        self.metrics_every = metrics_every
+        self._epoch = self._get_or_build()
+
+    # -- state -------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> ByzState:
+        """Replica-stacked initial state (same PRNG chain as
+        ``ByzSGDSimulator.init_state``: one split into model/run keys). With a
+        mesh, the state is placed onto the per-leaf-name layouts."""
+        init = make_init_fn(self.bundle, self.cfg)
+        state = jax.jit(init)(key)
+        if self.mesh is not None:
+            shardings = state_shardings(
+                jax.eval_shape(init, key), self.mesh,
+                overrides=attn_overrides(self.bundle.cfg, self.mesh))
+            state = jax.tree.map(jax.device_put, state, shardings)
+        return state
+
+    # -- epochs ------------------------------------------------------------
+    def _flags(self):
+        return (fn_cache_key(self.acc_fn), self.track_delta,
+                self.metrics_every, self.with_attack,
+                _agg_rules._SORT_NETWORK, _agg_dispatch.default_backend())
+
+    def _cache_key(self):
+        mesh_key = None if self.mesh is None else id(self.mesh)
+        return ("protocol-epoch", self.cfg, fn_cache_key(self.bundle.loss),
+                fn_cache_key(self.bundle.init), fn_cache_key(self.lr),
+                delivery_cache_key(self.delivery), mesh_key, *self._flags())
+
+    def _instance_key(self):
+        return ("protocol-epoch-inst", id(self), *self._flags())
+
+    def _extra_args(self):
+        if self.eval_set is not None:
+            return self.eval_set
+        return (jnp.zeros(()), jnp.zeros(()))
+
+    def _build(self):
+        pcfg = self.cfg
+        T = pcfg.T
+        h = pcfg.n_groups - pcfg.byz.n_byz_servers
+        track_delta, acc_fn = self.track_delta, self.acc_fn
+        metrics_every = self.metrics_every
+        scatter = make_scatter_step(self.bundle, pcfg, self.lr,
+                                    self.with_attack, self.mesh,
+                                    self.delivery)
+        gather = make_gather_step(pcfg, self.with_attack, self.mesh,
+                                  self.delivery)
+
+        def step_metrics(state: ByzState, delta_pre, eval_x, eval_y):
+            m = {}
+            if acc_fn is not None:
+                def ev(_):
+                    return acc_fn(jax.tree.map(lambda l: l[0], state.params),
+                                  eval_x, eval_y)
+
+                if metrics_every == 1:
+                    m["acc"] = ev(None)
+                else:
+                    m["acc"] = lax.cond((state.t - 1) % metrics_every == 0,
+                                        ev, lambda _: jnp.float32(0.0), None)
+            if track_delta:
+                from .simulator import (coordinatewise_diameter_sum,
+                                        l2_diameter)
+                m["delta_pre"] = delta_pre
+                m["delta"] = coordinatewise_diameter_sum(state.params, h)
+                m["l2_diam"] = l2_diameter(state.params, h)
+            return m
+
+        def epoch(state: ByzState, batches, eval_x, eval_y):
+            def body(state, batch):
+                state = scatter(state, batch)
+                if track_delta:
+                    from .simulator import coordinatewise_diameter_sum
+                    delta_pre = coordinatewise_diameter_sum(state.params, h)
+                else:
+                    delta_pre = None
+                # post-step boundary, like the async simulator: the gather
+                # closes the scatter phase when t (already advanced) hits T
+                state = lax.cond(state.t % T == 0, gather, lambda s: s, state)
+                return state, step_metrics(state, delta_pre, eval_x, eval_y)
+
+            return lax.scan(body, state, batches)
+
+        return jax.jit(epoch, donate_argnums=(0,))
+
+
+def collective_volume_bytes(pcfg: ProtocolConfig, n_params: int) -> int:
+    """Modeled per-step cross-'rep' collective exchange (bytes) of one scatter
+    step, per the engine contracts in the module docstring: the naive engine
+    all-gathers the G-replica gradient/model stacks (2·(G-1)·P payloads leave
+    each group), the sharded engine keeps aggregations as reductions over
+    'rep' (reduce-scatter/all-reduce, ~2·P)."""
+    itemsize = jnp.dtype(pcfg.exchange_dtype).itemsize
+    G = pcfg.n_groups
+    if pcfg.engine == "naive":
+        return 2 * (G - 1) * n_params * itemsize
+    return 2 * n_params * itemsize

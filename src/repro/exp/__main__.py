@@ -1,8 +1,10 @@
-"""Print the registry-derived experiment preset table (the README section).
+"""Print the registry-derived README tables (runners + experiment presets).
 
     PYTHONPATH=src python -m repro.exp
 """
-from .presets import markdown_table
+from .presets import markdown_table, runners_table
 
 if __name__ == "__main__":
+    print(runners_table())
+    print()
     print(markdown_table())

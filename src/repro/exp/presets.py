@@ -50,9 +50,11 @@ def specs() -> tuple[Experiment, ...]:
 # ---------------------------------------------------------------------------
 
 # the CI/`make exp` smoke spec: small enough to run through every runner in
-# seconds, shaped to exercise a gather boundary and a tail (steps % T != 0)
+# seconds, shaped to exercise a gather boundary and a tail (steps % T != 0).
+# n_workers == n_servers so the same spec also sweeps onto the distributed
+# protocol runner (G = 5 co-located groups) unchanged.
 register(Experiment(
-    name="smoke", n_workers=7, f_workers=2, n_servers=5, f_servers=1, T=5,
+    name="smoke", n_workers=5, f_workers=1, n_servers=5, f_servers=1, T=5,
     steps=12, batch=8, model="mlp_h32", data="mixture5_small",
     scenario="baseline_uniform", metrics_every=5, eval_n=256))
 
@@ -109,6 +111,34 @@ register(Experiment(
 # ---------------------------------------------------------------------------
 # registry-derived documentation (README preset table)
 # ---------------------------------------------------------------------------
+
+
+def runners_table() -> str:
+    """README "Runners" table (``python -m repro.exp`` regenerates it).
+
+    One row per ``Experiment.runner`` value; the collective-volume column
+    models the per-step cross-'rep' exchange of the protocol's two collective
+    engines (P = model parameters; see
+    ``repro.core.protocol.collective_volume_bytes``)."""
+    rows = [
+        ("stepwise", "per-step jitted oracle loop (`ByzSGDSimulator.run`)",
+         "uniform or trace", "one host, replica-stacked `[n_ps, ...]`", "—"),
+        ("fused", "donated `lax.scan` epochs (`EpochEngine`)",
+         "uniform or trace", "one host, replica-stacked `[n_ps, ...]`", "—"),
+        ("netsim", "fused epochs over the realized netsim trace "
+         "(+ cluster accounting in the result)", "trace",
+         "one host, replica-stacked `[n_ps, ...]`", "—"),
+        ("protocol", "donated `lax.scan` epochs (`ProtocolEngine`)",
+         "uniform or trace",
+         "`[G, ...]` sharded over the ('rep','fsdp','model') mesh",
+         "naive 2(G−1)·P vs sharded ≈2·P"),
+    ]
+    out = ["| runner | loop | delivery | state layout | "
+           "per-step collective volume (naive vs sharded) |",
+           "|---|---|---|---|---|"]
+    for name, loop, deliv, layout, vol in rows:
+        out.append(f"| `{name}` | {loop} | {deliv} | {layout} | {vol} |")
+    return "\n".join(out)
 
 
 def markdown_table() -> str:

@@ -10,13 +10,20 @@ Dispatches an :class:`~repro.exp.spec.Experiment` to
   * ``netsim``   — a trace-driven run: the named netsim scenario is simulated
     first, the realized quorums/staleness replay through ``TraceDelivery``,
     and the cluster's accounting rides along in the result,
+  * ``protocol`` — the genuinely-distributed path: the same spec lowered to
+    ``ProtocolConfig`` (G = n_workers = n_servers co-located groups) and run
+    through :class:`repro.core.protocol.ProtocolEngine` fused epochs over a
+    ('rep', 'fsdp', 'model') mesh built from the available devices (down to
+    one device, where the fused runner is its oracle); the mesh shape and
+    collective engine land in the result's provenance,
 
 and returns a uniform :class:`RunResult`: strided metric ``logs``, ``final``
 metrics, wall seconds, and a ``provenance`` block (spec hash + git sha +
 jax/device info) that ``benchmarks/run.py`` writes verbatim into
-``results/benchmarks/*.json``. The three runners train the *same* experiment:
+``results/benchmarks/*.json``. The runners train the *same* experiment:
 stepwise and fused are equivalence-tested (params allclose) in
-``tests/test_exp.py``.
+``tests/test_exp.py``, and protocol against both in
+``tests/test_protocol_engine.py``.
 """
 from __future__ import annotations
 
@@ -115,6 +122,8 @@ def run(experiment: Experiment | str, **overrides) -> RunResult:
                               else (None, None))
             if e.runner == "stepwise":
                 return _run_stepwise(e, delivery, info)
+            if e.runner == "protocol":
+                return _run_protocol(e, delivery, info)
             return _run_fused(e, delivery, info)
     finally:
         if e.agg_backend is not None:
@@ -217,6 +226,47 @@ def _run_fused(e: Experiment, delivery=None, netsim=None) -> RunResult:
     final = _final_metrics(e, state, acc, (ex, ey), mbuf)
     return RunResult(e, logs, final, wall, provenance(e.spec_hash),
                      netsim=netsim, state=state, buffers=mbuf)
+
+
+def _run_protocol(e: Experiment, delivery=None, netsim=None) -> RunResult:
+    from ..core import protocol as _protocol
+    from ..launch.mesh import make_protocol_mesh, use_mesh
+    pcfg = e.to_protocol_config()
+    G = pcfg.n_groups
+    init_fn, loss_fn, acc = e.build_problem()
+    bundle = _protocol.ProblemBundle(init=init_fn, loss=loss_fn)
+    mesh = make_protocol_mesh(G)
+    stream = DeviceBatchStream(e.seed, e.mixture, G, e.batch)
+    ex, ey = stream.eval_set(e.eval_n)
+    with_attack = bool(e.byz.worker_attack or e.byz.server_attack)
+    with use_mesh(mesh):
+        eng = _protocol.ProtocolEngine(
+            bundle, pcfg, e.build_schedule(), mesh=mesh, delivery=delivery,
+            with_attack=with_attack, acc_fn=acc, eval_set=(ex, ey),
+            track_delta=e.track_delta, metrics_every=e.metrics_every)
+        state = eng.init_state(jax.random.PRNGKey(e.seed))
+        t0 = time.time()
+        state, mbuf = eng.run(state, stream=stream, steps=e.steps,
+                              epoch_steps=e.epoch_steps)
+        wall = time.time() - t0
+
+    logs = []
+    for i in range(0, e.steps, e.metrics_every):
+        m = {"step": i, "acc": float(mbuf["acc"][i])}
+        if e.track_delta:
+            m["delta"] = float(mbuf["delta"][i])
+            m["l2_diam"] = float(mbuf["l2_diam"][i])
+        stal = eng.delivery.staleness(i)
+        if stal:
+            m.update(stal)
+        logs.append(m)
+    final = _final_metrics(e, state, acc, (ex, ey), mbuf)
+    prov = provenance(e.spec_hash)
+    prov["mesh"] = dict(zip(mesh.axis_names,
+                            (int(n) for n in mesh.devices.shape)))
+    prov["protocol_engine"] = pcfg.engine
+    return RunResult(e, logs, final, wall, prov, netsim=netsim, state=state,
+                     buffers=mbuf)
 
 
 def write_result(res: RunResult, out_dir: str = "results/benchmarks",

@@ -76,8 +76,9 @@ SCHEDULES: dict[str, Callable] = {
 #: provenance without changing the run)
 SCHEDULES_WITH_DECAY = frozenset({"inverse_linear"})
 
-RUNNERS = ("stepwise", "fused", "netsim")
+RUNNERS = ("stepwise", "fused", "netsim", "protocol")
 DELIVERIES = ("uniform", "trace")
+PROTOCOL_ENGINES = ("naive", "sharded")
 
 
 @dataclass(frozen=True)
@@ -112,7 +113,7 @@ class Experiment:
     decay: float = 0.005
     l2: float = 1e-4
     # -- run shape
-    runner: str = "fused"             # "stepwise" | "fused" | "netsim"
+    runner: str = "fused"     # "stepwise" | "fused" | "netsim" | "protocol"
     steps: int = 150
     batch: int = 25
     seed: int = 0
@@ -125,6 +126,7 @@ class Experiment:
     agg_backend: str | None = None    # None = process default (env/auto)
     sort_network: bool = True
     epoch_steps: int | None = None    # fused scan chunk (None = T)
+    protocol_engine: str = "sharded"  # runner="protocol" collective engine
 
     # -- construction-time validation -------------------------------------
     def __post_init__(self):
@@ -180,9 +182,18 @@ class Experiment:
                                  f"got {getattr(self, key)}")
         if self.agg_backend not in (None, "auto", "jnp", "pallas"):
             raise ValueError(f"unknown agg_backend {self.agg_backend!r}")
+        if self.protocol_engine not in PROTOCOL_ENGINES:
+            raise ValueError(f"unknown protocol_engine "
+                             f"{self.protocol_engine!r}; "
+                             f"choose from {PROTOCOL_ENGINES}")
         # the cluster-shape / GAR / threat-model preconditions: lowering to
         # ByzSGDConfig runs the paper's Table-1 validation + registry checks
         self.to_config()
+        if self.runner == "protocol":
+            # the distributed path maps G co-located worker+server groups
+            # onto 'rep' failure domains: shape + rule capabilities validated
+            # by lowering to ProtocolConfig at construction, not at run time
+            self.to_protocol_config()
 
     # -- serialization -----------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
@@ -239,6 +250,50 @@ class Experiment:
             if mine is not None and getattr(cfg, key) != mine:
                 raise ValueError(f"lowering to ByzSGDConfig changed {key}")
         return cfg
+
+    def to_protocol_config(self):
+        """Lower to the distributed :class:`~repro.core.protocol.ProtocolConfig`
+        (``runner="protocol"``), cross-validated like :meth:`to_config`.
+
+        The protocol's failure domains are G co-located worker+server groups,
+        so the spec must declare ``n_workers == n_servers`` (= G); quorum
+        defaults come from the ``ByzSGDConfig`` lowering so the 1-device
+        protocol draws the same quorums as the single-host oracle. The
+        ``variant`` maps onto the protocol's pull schedule: async → masked
+        ``pull_gar`` over the delivered quorum (oracle-matched against the
+        fused runner on a 1-device mesh), sync → the protocol's own §5
+        round-robin pull + distance filter — a collective formulation that is
+        a *documented deviation* from the single-host sync filter variant
+        (different filters, no per-worker model state), so sync protocol runs
+        are not equivalence-gated against the fused runner."""
+        from ..core.protocol import ProtocolConfig
+        if self.n_workers != self.n_servers:
+            raise ValueError(
+                f'runner="protocol" maps co-located worker+server groups '
+                f"onto 'rep' failure domains and needs "
+                f"n_workers == n_servers (= G); got "
+                f"{self.n_workers} != {self.n_servers}")
+        cfg = self.to_config()
+        pcfg = ProtocolConfig.derive(
+            self.n_workers, T=self.T, engine=self.protocol_engine,
+            pull=("roundrobin" if self.variant == "sync" else "median"),
+            f_workers=self.f_workers, f_servers=self.f_servers,
+            q_workers=cfg.q_workers, q_servers=cfg.q_servers,
+            gar=self.gar, pull_gar=self.pull_gar,
+            gather_gar=self.gather_gar,
+            mda_exact_limit=self.mda_exact_limit, byz=self.byz)
+        for key, mine in (("n_groups", self.n_workers),
+                          ("f_workers", self.f_workers),
+                          ("f_servers", self.f_servers),
+                          ("q_workers", cfg.q_workers),
+                          ("q_servers", cfg.q_servers), ("T", self.T),
+                          ("gar", self.gar), ("pull_gar", self.pull_gar),
+                          ("gather_gar", self.gather_gar),
+                          ("byz", self.byz)):
+            if getattr(pcfg, key) != mine:
+                raise ValueError(f"lowering to ProtocolConfig changed {key}: "
+                                 f"{mine!r} -> {getattr(pcfg, key)!r}")
+        return pcfg
 
     def to_scenario(self, **overrides):
         """Lower to the netsim ``Scenario`` (via its factory registry),

@@ -79,6 +79,24 @@ def make_byz_mesh(mesh, n_groups: int) -> Mesh:
     return _mk_mesh(devs, ("rep", "fsdp", "model"))
 
 
+def make_protocol_mesh(n_groups: int, devices=None) -> Mesh:
+    """('rep', 'fsdp', 'model') mesh over the *available* devices for a
+    G-group protocol run (the ``Experiment.runner="protocol"`` path).
+
+    Unlike :func:`make_byz_mesh` (which carves a production mesh whose dp
+    slices must divide into the groups), this places 'rep' on the largest
+    divisor of ``n_groups`` that the device count can host — down to a
+    1-device (1,1,1) mesh, where all G replica stacks live on one chip and the
+    protocol is oracle-checked against the single-host simulator."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if not devices:
+        raise ValueError("no jax devices available for the protocol mesh")
+    rep = max(d for d in range(1, min(n_groups, len(devices)) + 1)
+              if n_groups % d == 0)
+    devs = np.asarray(devices[:rep]).reshape(rep, 1, 1)
+    return _mk_mesh(devs, ("rep", "fsdp", "model"))
+
+
 def make_serve_mesh(mesh) -> Mesh:
     """('data', 'model') flat view for serving (no replica axis)."""
     R, M = dp_size(mesh), model_size(mesh)

@@ -148,6 +148,20 @@ class ClusterSim:
             return lambda i: (w + k + i) % self.n_ps
         return lambda i: (w + i) % self.n_ps
 
+    def _push_fallback(self, s: int, k: int):
+        """Pad pattern for a starved push quorum: in the sync schedule the
+        scheduled senders are the workers w ≡ (s - k) (mod n_ps) — the
+        round-robin exchange partners of server s at step k. Pads cycle
+        WITHIN that class so a forced close never attributes a gradient to a
+        worker the schedule would not route here."""
+        if self.sc.variant == "sync":
+            r = (s - k) % self.n_ps
+            cnt = self.sc.push_scheduled(s, k)
+            if cnt == 0:  # degenerate (n_ps > n_w residue): nothing scheduled
+                return lambda i: (r + i) % self.n_w
+            return lambda i: r + (i % cnt) * self.n_ps
+        return lambda i: (s + i) % self.n_w
+
     # -- wire --------------------------------------------------------------
     def _send(self, src: int, dst: int, phase: str, tag: int) -> None:
         t = self.loop.now
@@ -231,6 +245,13 @@ class ClusterSim:
                 self.loop.at(up, self._worker_compute_done, w, k)
             return
         for s in range(self.n_ps):
+            # sync (§5): the gradient goes ONLY to the round-robin server the
+            # worker exchanges with this step — the request half of the
+            # server-side round-robin reply pair, not a broadcast (the
+            # worker_tx n_ps·d -> 1·d byte-model correction; see
+            # exp_messages.model_bytes). Async broadcasts to every server.
+            if self.sc.variant == "sync" and (w + k) % self.n_ps != s:
+                continue
             self._send(self.n_ps + w, s, "push", k)
         self._worker_enter_step(w, k + 1)
 
@@ -271,19 +292,24 @@ class ClusterSim:
     def _server_try_close(self, s: int, force: bool = False) -> None:
         k = self.s_step[s]
         q = self.s_push[s].setdefault(k, _Quorum())
-        need = self.sc.push_need
+        # the wait threshold is the SCHEDULED sender count (sync: only the
+        # round-robin exchange partners; async: the q_w quorum); the trace row
+        # width stays the rectangular push_need, padded by cycling — width
+        # padding is schedule geometry, never counted as a shortfall
+        need = self.sc.push_scheduled(s, k)
+        width = self.sc.push_need
         if q.closed or (len(q.senders) < need and not force):
             return
         q.closed = True
-        idx, stale = _pad(q.senders, q.stale, need,
-                          fallback=lambda i: (s + i) % self.n_w)
+        idx, stale = _pad(q.senders, q.stale, width,
+                          fallback=self._push_fallback(s, k))
         self.shortfalls += max(need - len(q.senders), 0)
         self.push_idx[k, s] = idx
         self.push_stale[k, s] = stale
         self.push_closed[k, s] = True
-        for _ in range(min(len(q.senders), need)):
+        for _ in range(min(len(q.senders), width)):
             self.ledger.deliver(s, "push", self.nbytes)
-        for _ in range(max(len(q.senders) - need, 0)):
+        for _ in range(max(len(q.senders) - width, 0)):
             self.ledger.late(s, "push", self.nbytes)
         self.loop.after(self.sc.update_ms, self._server_update_done, s, k)
 
@@ -396,9 +422,10 @@ class ClusterSim:
             for s in range(self.n_ps):
                 if not self.push_closed[k, s] and self.s_step[s] <= k \
                         and not self.s_done[s]:
-                    self.push_idx[k, s] = [(s + i) % self.n_w
+                    fb = self._push_fallback(s, k)
+                    self.push_idx[k, s] = [fb(i)
                                            for i in range(self.sc.push_need)]
-                    self.shortfalls += self.sc.push_need
+                    self.shortfalls += self.sc.push_scheduled(s, k)
         for r in range(self.n_gathers):
             for s in range(self.n_ps):
                 if not self.gather_idx[r, s].any():

@@ -44,9 +44,10 @@ class Scenario:
     q_servers: int | None = None
     T: int = 5
     steps: int = 30
-    # message schedule: "async" waits on q-of-n quorums; "sync" (§5) has each
-    # worker pull ONE model round-robin and servers wait for ALL n_w
-    # gradients — fewer bytes on the wire, the paper's throughput argument
+    # message schedule: "async" waits on q-of-n quorums; "sync" (§5) pairs
+    # each worker with ONE round-robin server per step — one gradient up, one
+    # model reply down (server-side round-robin replies; neither direction is
+    # a broadcast) — fewer bytes on the wire, the paper's throughput argument
     variant: str = "async"
     # payload: model dimension in scalars (d) and bytes per scalar
     model_d: int = 79_510          # paper's MNIST CNN
@@ -94,7 +95,23 @@ class Scenario:
 
     @property
     def push_need(self) -> int:
-        return self.n_workers if self.variant == "sync" else self.q_workers
+        """Push-trace row width: in the sync schedule a server receives only
+        the gradients of the workers whose round-robin exchange lands on it
+        this step (<= ceil(n_w / n_ps)), not all n_w."""
+        if self.variant == "sync":
+            return -(-self.n_workers // self.n_servers)  # ceil
+        return self.q_workers
+
+    def push_scheduled(self, s: int, k: int) -> int:
+        """How many gradients server ``s`` waits for at step ``k``: the sync
+        schedule assigns worker w to server (w + k) % n_ps, so s's senders are
+        the workers w ≡ (s - k) (mod n_ps); async waits on the q_w quorum."""
+        if self.variant != "sync":
+            return self.q_workers
+        r = (s - k) % self.n_servers
+        if r >= self.n_workers:
+            return 0
+        return (self.n_workers - 1 - r) // self.n_servers + 1
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)

@@ -209,6 +209,31 @@ class TestRunners:
                                    rtol=1e-5, atol=1e-6)
         assert a.final["acc"] == pytest.approx(b.final["acc"], abs=1e-5)
 
+    def test_protocol_equals_fused(self):
+        # the acceptance criterion: the SAME spec through the distributed
+        # protocol on a 1-group/1-device mesh matches the fused runner
+        e = exp.get("smoke", steps=7, metrics_every=1)
+        a = exp.run(e, runner="fused")
+        b = exp.run(e, runner="protocol")
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(b.state.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=2e-5, atol=2e-6)
+        assert [m["acc"] for m in a.logs] == [m["acc"] for m in b.logs]
+        assert a.final["acc"] == pytest.approx(b.final["acc"], abs=1e-5)
+        assert b.provenance["mesh"] == {"rep": 1, "fsdp": 1, "model": 1}
+        assert b.provenance["protocol_engine"] == "sharded"
+
+    def test_protocol_requires_square_cluster(self):
+        with pytest.raises(ValueError, match="n_workers == n_servers"):
+            small(runner="protocol")  # SMALL is 7 workers / 5 servers
+
+    def test_protocol_engine_knob_validated(self):
+        with pytest.raises(ValueError, match="unknown protocol_engine"):
+            small(protocol_engine="warp")
+        e = exp.get("smoke", runner="protocol", protocol_engine="naive")
+        assert e.to_protocol_config().engine == "naive"
+
     def test_netsim_runner_attaches_accounting(self):
         res = exp.run("smoke", runner="netsim", steps=6)
         assert res.netsim is not None
@@ -279,19 +304,64 @@ class TestNetsimSatellites:
         from repro.netsim import ClusterSim, scenarios
         sc = scenarios.build("baseline_uniform", variant="sync", n_workers=5,
                              f_workers=1, steps=6)
-        assert sc.pull_need == 1 and sc.push_need == 5
+        assert sc.pull_need == 1 and sc.push_need == 1
         t = ClusterSim(sc).run()
         assert t.pull_idx.shape == (6, 5, 1)
-        assert t.push_idx.shape == (6, 5, 5)
+        assert t.push_idx.shape == (6, 5, 1)
         assert t.shortfalls == 0
         # round-robin pull: worker w at step k accepts server (w + k) % n_ps
         for k in range(6):
             for w in range(5):
                 assert t.pull_idx[k, w, 0] == (w + k) % sc.n_servers
-        # every server consumed every worker's gradient
+        # round-robin reply pair: server s consumed exactly the gradient of
+        # its exchange partner w = (s - k) % n_ps (no broadcast pushes)
         for k in range(6):
             for s in range(sc.n_servers):
-                assert sorted(t.push_idx[k, s].tolist()) == list(range(5))
+                assert t.push_idx[k, s, 0] == (s - k) % sc.n_servers
+
+    def test_sync_push_schedule_uneven_workers(self):
+        # n_w = 9, n_ps = 5: rows are ceil(9/5) = 2 wide; server s at step k
+        # waits only for its scheduled congruence class w ≡ s - k (mod 5)
+        from repro.netsim import ClusterSim, scenarios
+        sc = scenarios.build("baseline_uniform", variant="sync", n_workers=9,
+                             f_workers=1, steps=4)
+        assert sc.push_need == 2
+        for k in range(4):
+            for s in range(5):
+                r = (s - k) % 5
+                assert sc.push_scheduled(s, k) == (2 if r <= 3 else 1)
+        t = ClusterSim(sc).run()
+        assert t.shortfalls == 0
+        assert t.push_idx.shape == (4, 5, 2)
+        for k in range(4):
+            for s in range(5):
+                r = (s - k) % 5
+                scheduled = {w for w in range(9) if w % 5 == r}
+                assert set(t.push_idx[k, s].tolist()) <= scheduled
+        # per-step sync bytes: each worker sends exactly ONE gradient
+        tot = t.ledger.totals()
+        D = sc.model_d * sc.dtype_bytes
+        assert tot["push"]["tx_bytes"] == 9 * 4 * D
+
+    def test_sync_push_pads_stay_in_scheduled_class(self):
+        # a permanently-dead worker starves its round-robin servers: the
+        # forced-close pads must still name workers from the scheduled
+        # congruence class w ≡ s - k (mod n_ps), never an unscheduled worker
+        from repro.netsim import ClusterSim, scenarios
+        from repro.netsim.faults import CrashPlan, CrashWindow, FaultPlan
+        sc = scenarios.build(
+            "baseline_uniform", variant="sync", n_workers=9, f_workers=1,
+            steps=4, update_ms=0.1,
+            faults=FaultPlan(crashes=CrashPlan((
+                CrashWindow(node=5, t_down=0.0, t_up=float("inf")),))))
+        t = ClusterSim(sc).run()
+        assert t.shortfalls > 0
+        for k in range(sc.steps):
+            for s in range(sc.n_servers):
+                r = (s - k) % sc.n_servers
+                scheduled = {w for w in range(sc.n_workers)
+                             if w % sc.n_servers == r}
+                assert set(t.push_idx[k, s].tolist()) <= scheduled, (k, s)
 
     def test_sync_closed_zero_row_not_refilled_as_shortfall(self):
         """A sync pull row recording server 0 is a legitimately closed

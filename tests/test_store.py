@@ -1,0 +1,53 @@
+"""benchmarks/store.py: the spec-hash-keyed result store (sweep cache /
+regression tracker behind ``benchmarks/run.py --store``)."""
+import json
+
+from benchmarks import store
+
+
+def entry(spec_hash="abc123", runner="fused", git_sha="deadbeef",
+          acc=0.9, steps=(0.1, 0.5)):
+    return {
+        "experiment": {"name": "smoke", "runner": runner},
+        "logs": [{"step": 10 * i, "acc": a} for i, a in enumerate(steps)],
+        "final": {"acc": acc},
+        "wall_s": 1.0,
+        "provenance": {"spec_hash": spec_hash, "git_sha": git_sha},
+    }
+
+
+class TestStore:
+    def test_append_then_dedupe(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        assert store.store(entry(), path) == ("appended", [])
+        # identical rerun (timing may differ): deduped, store untouched
+        dup = entry()
+        dup["wall_s"] = 99.0
+        assert store.store(dup, path) == ("duplicate", [])
+        assert len(store.load(path)) == 1
+
+    def test_drift_prints_diff_and_replaces(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        store.store(entry(acc=0.9), path)
+        status, drift = store.store(entry(acc=0.7, steps=(0.1, 0.3)), path)
+        assert status == "updated"
+        assert any("final.acc" in line for line in drift)
+        assert any("logs[1]" in line for line in drift)
+        entries = store.load(path)
+        assert len(entries) == 1 and entries[0]["final"]["acc"] == 0.7
+
+    def test_key_is_spec_runner_sha(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        store.store(entry(), path)
+        store.store(entry(runner="protocol"), path)
+        store.store(entry(git_sha="0000000"), path)
+        store.store(entry(spec_hash="other"), path)
+        assert len(store.load(path)) == 4
+
+    def test_jsonl_round_trip(self, tmp_path):
+        path = str(tmp_path / "store.jsonl")
+        store.store(entry(), path)
+        with open(path) as fh:
+            lines = [json.loads(l) for l in fh]
+        assert lines[0]["provenance"]["spec_hash"] == "abc123"
+        assert store.entry_key(lines[0]) == ("abc123", "fused", "deadbeef")
