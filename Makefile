@@ -2,7 +2,10 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 fast netsim agg-bench bench examples perf exp
+.PHONY: tier1 test fast netsim agg-bench bench examples perf exp serve serve-bench
+
+# alias so `make test` means the tier-1 gate
+test: tier1
 
 # full tier-1 gate: everything, stop at first failure
 tier1:
@@ -28,6 +31,14 @@ agg-bench:
 # `python -m benchmarks.exp_throughput --seed-baseline`)
 perf:
 	$(ENV) $(PY) -m benchmarks.run --only throughput --compare BENCH_throughput.json
+
+# serve subsystem: unit/property tests (incl. the forced-8-device subprocess
+# lane) + the quorum-read overhead / Byzantine-correctness benchmark
+serve:
+	$(ENV) $(PY) -m pytest -q tests/test_serve.py tests/test_serve_distributed.py
+
+serve-bench:
+	$(ENV) $(PY) -m benchmarks.run --only serve
 
 # experiment-API smoke lane: one spec through all four runners (stepwise
 # oracle, fused engine, netsim trace, distributed protocol on a 1-device

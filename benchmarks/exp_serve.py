@@ -1,0 +1,145 @@
+"""Quorum-read serving overhead + Byzantine-correctness lane.
+
+Three measurements, one JSON (``results/benchmarks/serve.json``):
+
+  1. **overhead** — tok/s of a single honest replica vs a 4-replica quorum
+     service (same model, same prompts): the price of Byzantine-tolerant
+     reads (one extra vmap axis + a median/vote per token);
+  2. **correctness** — with 1 of 4 replicas Byzantine under EVERY model
+     attack in ``repro.core.attacks.MODEL_ATTACKS``, both read rules must
+     produce continuations token-identical to the honest single-replica
+     run (asserted, not just recorded), and the divergence detector must
+     eject the attacker;
+  3. **flood** — a ``repro.netsim`` request flood (1000+ clients) against
+     the replicated service shape, with per-replica latency/byte accounting.
+
+Run via ``python -m benchmarks.run --only serve`` or ``make serve-bench``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.attacks import MODEL_ATTACKS, ByzantineSpec
+from repro.models.registry import get_bundle
+from repro.netsim import flood as nsflood
+from repro.netsim import scenarios
+from repro.serve import READ_RULES, QuorumService, ReplicaPool
+
+
+def _continuations(pool, bundle, prompts, max_new, rule="median"):
+    svc = QuorumService(pool, bundle, n_slots=len(prompts),
+                        max_len=len(prompts[0]) + max_new + 1, rule=rule)
+    t0 = time.time()
+    outs = svc.generate(prompts, max_new=max_new)
+    wall = time.time() - t0
+    return outs, wall, svc.report()
+
+
+def run(quick: bool = True):
+    R, f = 4, 1
+    n_prompts, plen, max_new = (2, 8, 6) if quick else (4, 16, 16)
+    bundle = get_bundle("phi4-mini-3.8b", reduced=True)
+    params = bundle.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompts = [[int(t) for t in row] for row in jax.random.randint(
+        key, (n_prompts, plen), 0, bundle.cfg.vocab)]
+
+    # 1. honest baseline: one replica, no quorum machinery beyond R=1
+    base_pool = ReplicaPool.from_params(params, 1, f=0)
+    base_out, base_wall, base_rep = _continuations(base_pool, bundle,
+                                                   prompts, max_new)
+    results = {
+        "quick": quick, "arch": "phi4-mini-3.8b (reduced)",
+        "R": R, "f": f, "prompts": n_prompts, "max_new": max_new,
+        "baseline": {"tok_s": base_rep["tok_s"], "wall_s": base_wall},
+        "attacks": {},
+    }
+
+    # 2. honest quorum (overhead) + every attack x every read rule
+    honest_pool = ReplicaPool.from_params(params, R, f=f)
+    h_out, h_wall, h_rep = _continuations(honest_pool, bundle, prompts,
+                                          max_new)
+    assert h_out == base_out, "honest quorum continuation diverged"
+    assert not h_rep["ejections"], "detector ejected an honest replica"
+    results["quorum_honest"] = {
+        "tok_s": h_rep["tok_s"], "wall_s": h_wall,
+        "overhead_x": base_rep["tok_s"] / max(h_rep["tok_s"], 1e-9),
+    }
+
+    for attack in sorted(MODEL_ATTACKS):
+        spec = ByzantineSpec(server_attack=attack, n_byz_servers=1)
+        entry = {}
+        for rule in READ_RULES:
+            pool = ReplicaPool.from_params(params, R, f=f).corrupt(
+                spec, jax.random.PRNGKey(7))
+            outs, wall, rep = _continuations(pool, bundle, prompts,
+                                             max_new, rule=rule)
+            identical = outs == base_out
+            assert identical, (f"{attack}/{rule}: quorum continuation NOT "
+                               f"token-identical to honest baseline")
+            entry[rule] = {
+                "token_identical": identical,
+                "tok_s": rep["tok_s"],
+                "disagreement_rate": rep["disagreement_rate"],
+                "ejections": rep["ejections"],
+                "retries": rep["retries"],
+                "n_active": rep["n_active"],
+            }
+        results["attacks"][attack] = entry
+
+    # 3. request flood with per-replica accounting
+    n_clients = 1000 if quick else 5000
+    sc = scenarios.request_flood(
+        n_clients=n_clients, rate=2.0, duration_ms=1000.0, n_replicas=R, f=f,
+        slow_replicas=(R - 1,), slow_factor=6.0, deadline_ms=25.0, seed=0)
+    trace = nsflood.run_flood(sc)
+    results["flood"] = {
+        "n_clients": n_clients, "n_requests": trace.n_requests,
+        "percentiles_ms": trace.percentiles(),
+        "deadline_missed": trace.deadline_missed,
+        "per_replica": [
+            {"id": r, "served": int(trace.replica_served[r]),
+             "busy_ms": float(trace.replica_busy_ms[r]),
+             "late_replies": int(trace.replica_late[r]),
+             "max_queue_ms": float(trace.max_queue_ms[r])}
+            for r in range(R)],
+        "ledger": trace.ledger.totals(),
+        "summary": trace.summary(),
+    }
+    from repro.exp import provenance
+    results["provenance"] = provenance()
+    return results
+
+
+def summarize(res: dict) -> str:
+    q = res["quorum_honest"]
+    lines = [
+        f"[serve] {res['arch']}: R={res['R']} f={res['f']}, "
+        f"{res['prompts']} prompts x {res['max_new']} new tokens",
+        f"  single replica {res['baseline']['tok_s']:8.1f} tok/s | "
+        f"quorum {q['tok_s']:8.1f} tok/s "
+        f"(overhead {q['overhead_x']:.2f}x)",
+    ]
+    for attack, entry in sorted(res["attacks"].items()):
+        bits = []
+        for rule, r in entry.items():
+            tick = "identical" if r["token_identical"] else "DIVERGED"
+            bits.append(f"{rule}: {tick}, ejected {len(r['ejections'])}")
+        lines.append(f"  1-of-4 Byzantine [{attack:12s}]  " + " | ".join(bits))
+    fl = res["flood"]
+    pc = fl["percentiles_ms"]
+    lines.append(
+        f"  flood: {fl['n_clients']} clients -> {fl['n_requests']} requests, "
+        f"p50 {pc['p50']:.2f}ms p99 {pc['p99']:.2f}ms, "
+        f"missed>{25}ms: {fl['deadline_missed']}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import json
+    r = run(quick=True)
+    print(summarize(r))
+    print(json.dumps({k: v for k, v in r.items() if k != "flood"},
+                     indent=1, default=float)[:2000])

@@ -36,6 +36,7 @@ EXPERIMENTS = [
     ("netsim", "exp_netsim"),
     ("agg", "exp_agg_backends"),
     ("throughput", "exp_throughput"),
+    ("serve", "exp_serve"),
 ]
 
 

@@ -204,6 +204,13 @@ register(Aggregator(
     needs_pairwise_d2=True, tree_mode=None))
 
 register(Aggregator(
+    name="vote", fn=rules.vote, takes_f=False,
+    breakdown="n >= 2f+1", requires=(2, 1),
+    doc="coordinate-wise plurality vote (serve-quorum read rule for "
+        "discrete outputs, e.g. argmax token ids)",
+    masked_fn=rules.masked_vote))
+
+register(Aggregator(
     name="mean", fn=rules.mean, takes_f=False,
     breakdown="none (f = 0 only)", requires=(0, 1),
     doc="plain averaging (the paper's non-resilient strawman)",

@@ -317,6 +317,35 @@ def masked_coordinate_median(x: jax.Array, delivered: jax.Array) -> jax.Array:
     return 0.5 * (jnp.take(xs, lo, axis=0) + jnp.take(xs, hi, axis=0))
 
 
+def vote(x: jax.Array) -> jax.Array:
+    """Coordinate-wise plurality vote: per coordinate, the value held by the
+    most inputs (ties break toward the lowest input index). [n, ...] -> [...].
+
+    The read-quorum rule for *discrete* outputs (serving: argmax token ids):
+    with n >= 2f+1 identical honest values, f arbitrary corruptions can never
+    outvote the honest majority. Exact on any dtype — no averaging, the answer
+    is always one of the inputs."""
+    eq = (x[None, ...] == x[:, None, ...])          # [n, n, ...] pairwise
+    counts = jnp.sum(eq, axis=1)                    # [n, ...] per coordinate
+    win = jnp.argmax(counts, axis=0)                # [...] first max
+    return jnp.take_along_axis(x, win[None, ...], axis=0)[0]
+
+
+def masked_vote(x: jax.Array, delivered: jax.Array) -> jax.Array:
+    """Plurality vote over the delivered subset only. [n, ...],[n] -> [...].
+
+    Pairs are counted only between delivered inputs and undelivered rows get
+    count -1, so the winner is exactly ``vote(x[delivered])`` (first-index tie
+    break included: the subset gather preserves input order)."""
+    m = delivered.astype(bool)
+    shape = (-1,) + (1,) * (x.ndim - 1)
+    pair = (m[:, None] & m[None, :]).reshape(m.shape * 2 + (1,) * (x.ndim - 1))
+    eq = (x[None, ...] == x[:, None, ...]) & pair
+    counts = jnp.where(m.reshape(shape), jnp.sum(eq, axis=1), -1)
+    win = jnp.argmax(counts, axis=0)
+    return jnp.take_along_axis(x, win[None, ...], axis=0)[0]
+
+
 def mean(x: jax.Array) -> jax.Array:
     """Vanilla averaging (not Byzantine resilient — the paper's strawman)."""
     return jnp.mean(x, axis=0)

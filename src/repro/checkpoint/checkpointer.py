@@ -34,10 +34,38 @@ def _leaf_paths(tree):
     return out
 
 
+def step_dir(ckpt_dir: str, step: int) -> str:
+    """Canonical directory of one checkpoint step."""
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _parse_step(entry: str) -> int | None:
+    """``step_NNNNNNNN`` -> N; anything else (stray files, ``.tmp`` leftovers,
+    malformed names) -> None."""
+    if not entry.startswith("step_") or entry.endswith(".tmp"):
+        return None
+    suffix = entry[len("step_"):]
+    if not suffix.isdigit():
+        return None
+    return int(suffix)
+
+
+def _gc_orphan_tmp(ckpt_dir: str) -> None:
+    """Remove ``step_*.tmp`` leftovers from killed saves (they never shadow a
+    good checkpoint, but they accumulate and confuse directory listings)."""
+    for entry in os.listdir(ckpt_dir):
+        if entry.startswith("step_") and entry.endswith(".tmp"):
+            path = os.path.join(ckpt_dir, entry)
+            if os.path.isdir(path):
+                shutil.rmtree(path, ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, state_tree) -> str:
     """Atomically save a pytree checkpoint. Returns the final directory."""
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    final = step_dir(ckpt_dir, step)
     tmp = final + ".tmp"
+    os.makedirs(ckpt_dir, exist_ok=True)
+    _gc_orphan_tmp(ckpt_dir)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
     for name, leaf in _leaf_paths(state_tree):
@@ -57,8 +85,15 @@ def save(ckpt_dir: str, step: int, state_tree) -> str:
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = []
+    for entry in os.listdir(ckpt_dir):
+        step = _parse_step(entry)
+        if step is None or not os.path.isdir(os.path.join(ckpt_dir, entry)):
+            continue
+        # a step dir without its manifest is an interrupted/corrupt write
+        if not os.path.exists(os.path.join(ckpt_dir, entry, "manifest.json")):
+            continue
+        steps.append(step)
     return max(steps) if steps else None
 
 
@@ -66,7 +101,7 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     """Restore into the structure of ``like_tree``; re-shard with `shardings`
     (a matching pytree of NamedSharding or None -> default placement).
     Elastic: the stored logical shapes must match, the mesh need not."""
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    d = step_dir(ckpt_dir, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     names = [n for n, _ in _leaf_paths(like_tree)]

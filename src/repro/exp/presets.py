@@ -107,6 +107,22 @@ register(Experiment(
     byz=ByzantineSpec(worker_attack="alie", n_byz_workers=2, equivocate=True),
     **_NETSIM_COMMON))
 
+# serve presets: protocol-runner training that emits replica-stacked
+# checkpoints for repro.serve (ckpt_dir comes from the caller at run time:
+# exp.run("serve/ckpt_smoke", ckpt_dir=...)). G=5 satisfies Table 1's
+# n_ps >= 3f+2 for training; serving reads tolerate f=1 of any 2f+1 subset.
+_SERVE_COMMON = dict(
+    runner="protocol", n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+    T=5, steps=10, batch=8, model="mlp_h32", data="mixture5_small",
+    metrics_every=5, eval_n=256, ckpt_every=5)
+register(Experiment(name="serve/ckpt_smoke", **_SERVE_COMMON))
+# same training run with a lie-attacking server: the checkpoint carries the
+# corrupted replica, which quorum reads (or a consolidated restore) outvote
+register(Experiment(
+    name="serve/ckpt_lie_server",
+    byz=ByzantineSpec(server_attack="lie", n_byz_servers=1, equivocate=True),
+    **_SERVE_COMMON))
+
 
 # ---------------------------------------------------------------------------
 # registry-derived documentation (README preset table)

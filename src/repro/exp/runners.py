@@ -246,8 +246,29 @@ def _run_protocol(e: Experiment, delivery=None, netsim=None) -> RunResult:
             track_delta=e.track_delta, metrics_every=e.metrics_every)
         state = eng.init_state(jax.random.PRNGKey(e.seed))
         t0 = time.time()
-        state, mbuf = eng.run(state, stream=stream, steps=e.steps,
-                              epoch_steps=e.epoch_steps)
+        if e.ckpt_every:
+            # chunk the fused run at checkpoint boundaries: the engine's
+            # gather cadence rides on the step counter carried in the state,
+            # so chunking is training-equivalent to one eng.run call
+            if not e.ckpt_dir:
+                raise ValueError(
+                    f"experiment {e.name!r} sets ckpt_every={e.ckpt_every} "
+                    "but no ckpt_dir; pass one at run time, e.g. "
+                    'exp.run(name, ckpt_dir="...")')
+            from ..checkpoint import checkpointer as ck
+            bufs, done = [], 0
+            while done < e.steps:
+                n = min(e.ckpt_every, e.steps - done)
+                state, b = eng.run(state, stream=stream, steps=n,
+                                   epoch_steps=e.epoch_steps)
+                bufs.append(b)
+                done += n
+                ck.save(e.ckpt_dir, done, state)
+            mbuf = {k: np.concatenate([b[k] for b in bufs])
+                    for k in bufs[0]}
+        else:
+            state, mbuf = eng.run(state, stream=stream, steps=e.steps,
+                                  epoch_steps=e.epoch_steps)
         wall = time.time() - t0
 
     logs = []

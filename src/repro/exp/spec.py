@@ -127,6 +127,12 @@ class Experiment:
     sort_network: bool = True
     epoch_steps: int | None = None    # fused scan chunk (None = T)
     protocol_engine: str = "sharded"  # runner="protocol" collective engine
+    # -- checkpointing (runner="protocol"): emit the replica-stacked ByzState
+    # every ckpt_every steps into ckpt_dir (repro.checkpoint format; serve
+    # restores it via repro.serve.ReplicaPool.from_checkpoint). Presets may
+    # set ckpt_every with ckpt_dir=None — callers pass ckpt_dir at run time.
+    ckpt_every: int | None = None
+    ckpt_dir: str | None = None
 
     # -- construction-time validation -------------------------------------
     def __post_init__(self):
@@ -182,6 +188,18 @@ class Experiment:
                                  f"got {getattr(self, key)}")
         if self.agg_backend not in (None, "auto", "jnp", "pallas"):
             raise ValueError(f"unknown agg_backend {self.agg_backend!r}")
+        if self.ckpt_every is not None:
+            if self.runner != "protocol":
+                raise ValueError(
+                    'ckpt_every is a runner="protocol" knob (the protocol '
+                    "engine owns the replica-stacked ByzState that "
+                    f"checkpoints save); got runner={self.runner!r}")
+            if self.ckpt_every < 1:
+                raise ValueError(f"ckpt_every must be >= 1, "
+                                 f"got {self.ckpt_every}")
+        elif self.ckpt_dir is not None:
+            raise ValueError("ckpt_dir without ckpt_every does nothing; "
+                             "set ckpt_every to emit checkpoints")
         if self.protocol_engine not in PROTOCOL_ENGINES:
             raise ValueError(f"unknown protocol_engine "
                              f"{self.protocol_engine!r}; "

@@ -1,8 +1,14 @@
-"""Batched serving driver: DMC-consolidated model + prefill + decode loop.
+"""Batched serving driver: prefill + decode over a ByzSGD-trained model.
 
-Serving is the vanilla DP x TP path (the ByzSGD protocol protects training;
-a Byzantine-suspect checkpoint is neutralised at load time by
-median-of-replicas consolidation — checkpoint/checkpointer.py).
+Three model sources, by flag:
+
+  * default — fresh init, vanilla DP x TP single-model serving;
+  * ``--ckpt-dir`` — restore a replica-stacked ByzSGD checkpoint and
+    median-consolidate it to one model (a Byzantine-suspect replica is
+    outvoted at load time — checkpoint/checkpointer.py semantics);
+  * ``--ckpt-dir --quorum`` — keep ALL restored replicas live and serve
+    through :class:`repro.serve.QuorumService`: every token is a quorum
+    read, so up to f Byzantine replicas cannot corrupt a continuation.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --arch phi4-mini-3.8b --reduced \
@@ -16,12 +22,32 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..checkpoint import checkpointer as ck
-from ..core import protocol
 from ..models import sharding as shrules
 from ..models.registry import get_bundle
 from .mesh import compat_make_mesh, make_serve_mesh, use_mesh
 from .steps import serve_rules
+
+
+def _serve_quorum(args, bundle, pool, rules):
+    """--quorum path: all restored replicas live, every token a quorum read."""
+    from ..serve import QuorumService
+    B, S = args.batch, args.prefill
+    svc = QuorumService(pool, bundle, n_slots=B,
+                        max_len=S + args.decode + 1, rules=rules)
+    pf = bundle.make_batch("prefill", B, S, jax.random.PRNGKey(1))
+    prompts = [row.tolist() for row in jax.device_get(pf["tokens"])]
+    t0 = time.time()
+    outs = svc.generate(prompts, max_new=args.decode)
+    wall = time.time() - t0
+    rep = svc.report()
+    print(f"[serve] quorum ({rep['rule']}): {rep['committed_tokens']} tokens "
+          f"across {rep['n_replicas']} replicas (f={rep['f']}, "
+          f"{rep['n_active']} active) in {wall:.2f}s "
+          f"({rep['tok_s']:.1f} tok/s) | disagreement "
+          f"{rep['disagreement_rate']:.4f} | ejections {rep['ejections']} | "
+          f"retries {rep['retries']}")
+    print(f"[serve] sample continuation ids: {outs[0][:10]}")
+    return rep
 
 
 def main(argv=None):
@@ -34,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore + median-consolidate a ByzSGD checkpoint")
+    ap.add_argument("--quorum", action="store_true",
+                    help="with --ckpt-dir: serve every restored replica "
+                         "behind quorum reads instead of consolidating")
     args = ap.parse_args(argv)
 
     n_dev = jax.device_count()
@@ -48,14 +77,21 @@ def main(argv=None):
     rules = serve_rules(smesh, bundle.cfg)
 
     with use_mesh(smesh):
-        if args.ckpt_dir and ck.latest_step(args.ckpt_dir) is not None:
-            step = ck.latest_step(args.ckpt_dir)
-            # restore replica-stacked state, outvote corruption, serve
-            from .steps import build_train_cell  # for state shape only
-            like = None
-            raise SystemExit("checkpoint serving: use restore_consolidated "
-                             "with the training state tree (see tests)")
-        params = bundle.init(jax.random.PRNGKey(0))
+        pool = None
+        if args.ckpt_dir:
+            from ..serve import ReplicaPool, checkpoint_groups
+            step, R = checkpoint_groups(args.ckpt_dir)
+            f = (R - 1) // 3   # the protocol's server tolerance for R groups
+            pool = ReplicaPool.from_checkpoint(args.ckpt_dir, bundle.init,
+                                               step=step, f=f)
+            print(f"[serve] restored step {step}: {R} replicas (f={f}) "
+                  f"from {args.ckpt_dir}")
+            if args.quorum:
+                return _serve_quorum(args, bundle, pool, rules)
+            params = pool.consolidated()
+            print("[serve] median-consolidated to one serving model")
+        else:
+            params = bundle.init(jax.random.PRNGKey(0))
         params = jax.tree.map(lambda l: l.astype(jnp.bfloat16)
                               if l.dtype == jnp.float32 else l, params)
 

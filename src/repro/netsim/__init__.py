@@ -16,6 +16,7 @@ Quick start::
     print(trace.ledger.summary(sc))
     delivery = trace.to_delivery()      # feed to ByzSGDSimulator(delivery=...)
 """
-from . import accounting, cluster, events, faults, latency, scenarios  # noqa: F401
+from . import accounting, cluster, events, faults, flood, latency, scenarios  # noqa: F401
 from .cluster import ClusterSim, NetsimTrace  # noqa: F401
+from .flood import FloodTrace, RequestFloodScenario, run_flood  # noqa: F401
 from .scenarios import SCENARIOS, Scenario  # noqa: F401

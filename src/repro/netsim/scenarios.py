@@ -192,6 +192,16 @@ def byzantine_plus_slow(**kw) -> Scenario:
                     f_workers=f_w, **kw)
 
 
+def request_flood(n_clients: int = 1000, rate: float = 2.0, **kw):
+    """Serving-side flood against a replicated quorum-read service (see
+    :mod:`repro.netsim.flood`). Returns a :class:`~repro.netsim.flood
+    .RequestFloodScenario`, NOT a training :class:`Scenario` — serving has no
+    Table-1 worker/server preconditions, so it lives outside ``SCENARIOS``
+    (run with ``flood.run_flood``, not ``ClusterSim``)."""
+    from .flood import RequestFloodScenario
+    return RequestFloodScenario(n_clients=n_clients, rate=rate, **kw)
+
+
 SCENARIOS = {
     "baseline_uniform": baseline_uniform,
     "heavy_tail_stragglers": heavy_tail_stragglers,

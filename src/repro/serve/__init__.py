@@ -1,0 +1,29 @@
+"""repro.serve — Byzantine-tolerant replicated inference.
+
+The training side of the paper keeps f+1-of-n redundancy across server
+groups; this package carries that redundancy through to serving: a
+:class:`ReplicaPool` of independently-sourced parameter replicas answers
+every read, and quorum rules (registered in ``repro.agg``) consolidate the
+answers so up to f Byzantine replicas cannot corrupt a response.
+
+    ReplicaPool        — n replicas: fresh init / live state / checkpoint
+    quorum_tokens      — median-of-logits or vote-of-tokens read rules
+    DivergenceDetector — flags + ejects persistently-divergent replicas
+    ContinuousBatcher  — admission queue + slot refill + deadlines
+    QuorumService      — the replicated decode loop with metrics
+
+``python -m repro.serve`` prints the README quorum-read table.
+"""
+from .batcher import ContinuousBatcher, Request
+from .quorum import (READ_RULES, DetectorConfig, DivergenceDetector,
+                     disagreement, quorum_logits, quorum_tokens)
+from .replica import ReplicaPool, checkpoint_groups
+from .service import QuorumService
+
+__all__ = [
+    "ContinuousBatcher", "Request",
+    "READ_RULES", "DetectorConfig", "DivergenceDetector",
+    "disagreement", "quorum_logits", "quorum_tokens",
+    "ReplicaPool", "checkpoint_groups",
+    "QuorumService",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.serve`` — print the README quorum-read table."""
+from .quorum import markdown_table
+
+if __name__ == "__main__":
+    print(markdown_table())

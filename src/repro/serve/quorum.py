@@ -1,0 +1,151 @@
+"""Byzantine-tolerant read rules + the divergence detector.
+
+A *quorum read* consolidates the per-replica answers of a
+:class:`~repro.serve.replica.ReplicaPool` through a rule registered in
+``repro.agg`` — the read-time extension of the paper's DMC/median machinery
+(median-of-replicas answers survive up to f = ⌊(n−1)/2⌋ arbitrary replicas;
+we declare the protocol-matched f and keep n ≥ 2f+1):
+
+  * ``median`` — coordinate-wise median over the replica *logits*; the next
+    token is the argmax of the consolidated distribution. With bit-identical
+    honest replicas the median of [corrupt, h, h, h] is exactly h in every
+    coordinate, so continuations are token-identical to the honest model.
+  * ``vote``  — majority vote over the replicas' *argmax token ids* (the
+    discrete plurality rule registered in ``repro.agg``); cheaper on the wire
+    (one int per replica instead of a vocab-sized vector) and exact whenever
+    ≥ f+1 honest replicas agree on the top token.
+
+The :class:`DivergenceDetector` watches per-replica distance to the quorum
+answer: a replica persistently outside the honest envelope is flagged and
+ejected from the read mask — graceful degradation that never drops the pool
+below its 2f+1 quorum floor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.agg as agg
+
+#: read-rule registry names (both live in ``repro.agg``)
+READ_RULES = ("median", "vote")
+
+
+def quorum_logits(logits, f: int, mask=None):
+    """Consolidated logits: coordinate-wise median over the replica axis.
+    ``logits`` is ``[R, ...]``; ``mask`` (host bool ``[R]``) drops ejected
+    replicas with exact delivered-subset semantics."""
+    return agg.get("median")(logits, f, mask=mask)
+
+
+def quorum_tokens(logits, f: int, rule: str = "median", mask=None):
+    """One quorum-read step: per-replica logits ``[R, B, V]`` -> next token
+    ids ``[B]`` consolidated by ``rule`` (see module docstring)."""
+    if rule not in READ_RULES:
+        raise ValueError(f"unknown quorum read rule {rule!r}; "
+                         f"have {READ_RULES}")
+    if rule == "median":
+        return jnp.argmax(quorum_logits(logits, f, mask=mask),
+                          axis=-1).astype(jnp.int32)
+    votes = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [R, B]
+    return agg.get("vote")(votes, f, mask=mask)
+
+
+def disagreement(logits, tokens, mask=None) -> float:
+    """Fraction of (active replica, slot) argmax votes that differ from the
+    committed quorum token — the service's per-read disagreement metric."""
+    votes = np.asarray(jnp.argmax(logits, axis=-1))         # [R, B]
+    toks = np.asarray(tokens)[None, :]
+    m = np.ones(votes.shape[0], bool) if mask is None else np.asarray(mask)
+    if not m.any():
+        return 0.0
+    return float((votes[m] != toks).mean())
+
+
+@dataclass
+class DetectorConfig:
+    """Envelope test knobs: a replica strikes when its RMS logit distance to
+    the quorum answer exceeds ``abs_tol`` AND ``rel`` times the active-set
+    median distance; ``patience`` consecutive strikes flag it."""
+    patience: int = 3
+    rel: float = 4.0
+    abs_tol: float = 1e-4
+
+
+class DivergenceDetector:
+    """Flags/ejects replicas whose outputs persistently sit outside the
+    quorum envelope.
+
+    Purely host-side: :meth:`observe` takes the per-replica distances of one
+    read plus the pool's active mask and returns the indices it ejected this
+    read (never taking the active count below ``2f+1`` — beyond that the
+    detector keeps flagging but stops ejecting)."""
+
+    def __init__(self, n_replicas: int, f: int,
+                 cfg: DetectorConfig | None = None):
+        self.n = int(n_replicas)
+        self.f = int(f)
+        self.cfg = cfg or DetectorConfig()
+        self.strikes = np.zeros(self.n, np.int64)
+        self.flagged = np.zeros(self.n, bool)
+        self.reads = 0
+
+    @staticmethod
+    def distances(logits, answer) -> np.ndarray:
+        """Per-replica RMS distance to the quorum answer: [R, ...] vs [...]
+        -> [R] (device math, one scalar per replica on the host)."""
+        diff = (logits.astype(jnp.float32)
+                - jnp.asarray(answer, jnp.float32)[None])
+        axes = tuple(range(1, diff.ndim))
+        return np.asarray(jnp.sqrt(jnp.mean(diff * diff, axis=axes)))
+
+    def observe(self, dist: np.ndarray, active: np.ndarray) -> list[int]:
+        """Update strikes from one read's distances; flag on ``patience``
+        consecutive strikes; return replicas ejected this read (callers apply
+        them to the pool's mask). Honest replicas at distance ~0 never strike
+        (the ``abs_tol`` floor), so clean pools never eject."""
+        dist = np.asarray(dist, np.float64)
+        active = np.asarray(active, bool)
+        self.reads += 1
+        envelope = np.median(dist[active]) if active.any() else 0.0
+        thresh = max(self.cfg.abs_tol, self.cfg.rel * envelope)
+        outlier = active & (dist > thresh)
+        self.strikes = np.where(outlier, self.strikes + 1, 0)
+        newly = (~self.flagged) & (self.strikes >= self.cfg.patience)
+        self.flagged |= newly
+        # eject worst-first while the read quorum survives (>= 2f+1 active)
+        floor = 2 * self.f + 1
+        ejected = []
+        order = sorted(np.nonzero(newly)[0], key=lambda i: -dist[i])
+        n_active = int(active.sum())
+        for i in order:
+            if n_active - 1 < floor:
+                break
+            ejected.append(int(i))
+            n_active -= 1
+        return ejected
+
+
+def markdown_table() -> str:
+    """The README quorum-read table (``python -m repro.serve`` regenerates
+    it), derived from the ``repro.agg`` registry specs."""
+    rows = [
+        ("median", "coordinate-wise median over replica logits, then argmax",
+         "exact while <= f of n replicas are corrupt (n >= 2f+1)",
+         "one [B, V] logit stack per replica"),
+        ("vote", "plurality vote over per-replica argmax token ids",
+         "exact while >= f+1 honest replicas agree on the top token",
+         "one token id per replica"),
+    ]
+    out = ["| read rule | consolidation | guarantee | read payload |",
+           "|---|---|---|---|"]
+    for name, how, guarantee, payload in rows:
+        spec = agg.get(name)
+        out.append(f"| `{name}` (breakdown {spec.breakdown}) | {how} | "
+                   f"{guarantee} | {payload} |")
+    out.append("| divergence detector | RMS distance to the quorum answer vs "
+               "the active-set envelope | ejects a persistent outlier after "
+               "`patience` reads, never below 2f+1 active | — |")
+    return "\n".join(out)

@@ -1,0 +1,173 @@
+"""`ReplicaPool` — n independent parameter replicas behind one read surface.
+
+The ByzSGD protocol maintains f+1-of-n redundancy across server groups
+(`ByzState.params` leaves are `[G, ...]` replica stacks, and checkpoints save
+that stack verbatim). Serving discards that redundancy today; the pool keeps
+it: every replica answers each read independently and the quorum rules in
+:mod:`repro.serve.quorum` consolidate the answers so up to f Byzantine
+replicas cannot corrupt a response.
+
+Replica sources:
+
+  * :meth:`from_params` — broadcast one trusted model to n bit-identical
+    replicas (fresh init, or a consolidated checkpoint);
+  * :meth:`from_stacked` — adopt an existing `[R, ...]` stack (a live
+    ``ProtocolEngine`` state's params);
+  * :meth:`from_checkpoint` — restore a replica-stacked ByzSGD checkpoint
+    (``checkpoint/checkpointer.py`` format) straight into a pool.
+
+The pool is device-agnostic: callers may ``device_put`` ``params`` with any
+sharding (e.g. the replica axis over the serve mesh's 'data' axis) before
+building a service; every pool op is a pure `jax.vmap` over the leading axis.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpointer as ck
+from ..core.attacks import ByzantineSpec, inject_models
+
+
+def checkpoint_groups(ckpt_dir: str, step: int | None = None
+                      ) -> tuple[int, int]:
+    """(step, n_replicas) of a replica-stacked checkpoint, read from the
+    manifest (any ``params`` leaf's leading dim is the replica count)."""
+    if step is None:
+        step = ck.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    with open(os.path.join(ck.step_dir(ckpt_dir, step),
+                           "manifest.json")) as fh:
+        manifest = json.load(fh)
+    for name, info in manifest["leaves"].items():
+        if "params" in name.split("/")[0] and info["shape"]:
+            return step, int(info["shape"][0])
+    raise ValueError(f"checkpoint {ckpt_dir!r} step {step} has no "
+                     "replica-stacked params leaves")
+
+
+@dataclass
+class ReplicaPool:
+    """n parameter replicas (leaves ``[R, ...]``) + the declared Byzantine
+    tolerance f and a host-side liveness mask (quorum ejections land here)."""
+    params: Any
+    f: int = 0
+    active: np.ndarray = field(default=None)  # [R] bool
+
+    def __post_init__(self):
+        leaves = jax.tree.leaves(self.params)
+        if not leaves:
+            raise ValueError("ReplicaPool needs a non-empty params tree")
+        R = leaves[0].shape[0]
+        if any(l.shape[0] != R for l in leaves):
+            raise ValueError("all param leaves must share the leading "
+                             "replica axis")
+        if self.active is None:
+            self.active = np.ones(R, bool)
+        self.active = np.asarray(self.active, bool)
+        if self.active.shape != (R,):
+            raise ValueError(f"active mask must be [R={R}], "
+                             f"got {self.active.shape}")
+        if self.f < 0 or R < 2 * self.f + 1:
+            raise ValueError(f"quorum reads need n >= 2f+1 replicas "
+                             f"(got n={R}, f={self.f})")
+
+    # -- shape -------------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return jax.tree.leaves(self.params)[0].shape[0]
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def quorum_floor(self) -> int:
+        """Graceful-degradation floor: ejections never go below 2f+1."""
+        return 2 * self.f + 1
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_params(cls, params, n_replicas: int, f: int = 0) -> "ReplicaPool":
+        """Broadcast one trusted model to n bit-identical replicas."""
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_replicas,) + l.shape), params)
+        return cls(params=stacked, f=f)
+
+    @classmethod
+    def from_stacked(cls, stacked, f: int = 0,
+                     active: np.ndarray | None = None) -> "ReplicaPool":
+        """Adopt an existing ``[R, ...]`` stack (e.g. ``ByzState.params``)."""
+        return cls(params=stacked, f=f, active=active)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, init_params, *,
+                        step: int | None = None, f: int = 0) -> "ReplicaPool":
+        """Restore a replica-stacked ByzSGD checkpoint into a pool.
+
+        ``init_params(key) -> single-replica params`` names the param tree
+        (``bundle.init`` or an `Experiment.build_problem` init); the replica
+        count comes from the manifest, so one call serves any G. The restored
+        state is the protocol's ``ByzState`` (params/t/key)."""
+        from ..core.protocol import ByzState
+        step, G = checkpoint_groups(ckpt_dir, step)
+
+        def like(key):
+            k_model, k_run = jax.random.split(key)
+            p0 = init_params(k_model)
+            params = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (G,) + l.shape), p0)
+            return ByzState(params=params, t=jnp.zeros((), jnp.int32),
+                            key=k_run)
+
+        like_state = jax.eval_shape(like, jax.random.PRNGKey(0))
+        state, _ = ck.restore(ckpt_dir, step, like_state)
+        return cls(params=state.params, f=f)
+
+    # -- reads -------------------------------------------------------------
+    def replica_outputs(self, apply_fn, *args):
+        """``[R, ...]`` stack of per-replica outputs: ``apply_fn(params_r,
+        *args)`` vmapped over the replica axis (flagged replicas still
+        compute — the read rules mask them out, keeping shapes static)."""
+        return jax.vmap(lambda p: apply_fn(p, *args))(self.params)
+
+    def single(self, i: int = 0):
+        """One replica's params (the non-resilient baseline)."""
+        return jax.tree.map(lambda l: l[i], self.params)
+
+    def consolidated(self):
+        """Median-of-active-replicas -> one serving model (the DMC rule
+        applied at read time; checkpoint-level analogue:
+        ``checkpointer.restore_consolidated``)."""
+        mask = np.asarray(self.active)
+        return jax.tree.map(
+            lambda l: jnp.median(l[mask].astype(jnp.float32),
+                                 axis=0).astype(l.dtype), self.params)
+
+    # -- fault injection / membership --------------------------------------
+    def corrupt(self, spec: ByzantineSpec, key) -> "ReplicaPool":
+        """A new pool with the last ``spec.n_byz_servers`` replicas replaced
+        by the named model attack (testing/benchmark hook — the serving
+        analogue of the trainer's Byzantine server injection)."""
+        if spec.n_byz_servers > self.f:
+            raise ValueError(f"corrupting {spec.n_byz_servers} replicas "
+                             f"exceeds the declared tolerance f={self.f}")
+        return ReplicaPool(params=inject_models(self.params, spec, key),
+                           f=self.f, active=self.active.copy())
+
+    def deactivate(self, i: int) -> bool:
+        """Eject replica i unless that would break the 2f+1 read quorum.
+        Returns True when the ejection took effect."""
+        if not self.active[i]:
+            return False
+        if self.n_active - 1 < self.quorum_floor:
+            return False
+        self.active[i] = False
+        return True

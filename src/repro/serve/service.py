@@ -1,0 +1,212 @@
+"""`QuorumService` — the replicated inference loop.
+
+Every decode step runs on **all** replicas (one double-vmap: outer axis
+replicas, inner axis batch slots, each slot a B=1 KV cache so per-slot
+positions stay independent), then a single quorum read consolidates the
+per-replica logits into the committed next token
+(:func:`repro.serve.quorum.quorum_tokens`). Up to f Byzantine replicas
+therefore cannot corrupt a continuation, and with bit-identical honest
+replicas the output is token-identical to an honest single-replica run.
+
+On top of the device loop:
+
+  * continuous batching — :class:`~repro.serve.batcher.ContinuousBatcher`
+    refills freed slots while the others keep decoding;
+  * divergence detection — per-read replica distances feed the
+    :class:`~repro.serve.quorum.DivergenceDetector`; an ejection triggers a
+    same-read retry (the quorum is re-read without the flagged replica
+    before the token commits) and flips the pool's active mask;
+  * metrics — tok/s, quorum-disagreement rate, ejections/retries, and
+    per-request latency + deadline outcomes.
+
+Prompts are prefilled unpadded (one compile per distinct prompt length);
+right-padding would put a pad token at the read position and left-padding
+breaks positions, so exactness wins over compile reuse here. Token-in
+families only (vlm/audio need embeds at decode time).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import sharding as shrules
+from . import quorum
+from .batcher import ContinuousBatcher, Request
+from .replica import ReplicaPool
+
+
+class QuorumService:
+    """Byzantine-tolerant replicated decode over a :class:`ReplicaPool`."""
+
+    def __init__(self, pool: ReplicaPool, bundle, *, n_slots: int = 4,
+                 max_len: int = 128, n_chunks: int = 4, rule: str = "median",
+                 detector: quorum.DetectorConfig | None = None,
+                 max_queue: int | None = None, rules=()):
+        if bundle.cfg.family in ("vlm", "audio"):
+            raise ValueError(f"QuorumService serves token-in families only "
+                             f"(got {bundle.cfg.family!r})")
+        if rule not in quorum.READ_RULES:
+            raise ValueError(f"unknown read rule {rule!r}; "
+                             f"have {quorum.READ_RULES}")
+        self.pool = pool
+        self.bundle = bundle
+        self.rule = rule
+        self.max_len = max_len
+        self.batcher = ContinuousBatcher(n_slots, max_queue=max_queue)
+        self.detector = quorum.DivergenceDetector(pool.n_replicas, pool.f,
+                                                  detector)
+        self._rules = dict(rules)   # logical-name -> axes sharding rules
+
+        # per-slot B=1 caches stacked [R, n_slots, ...] so every slot keeps
+        # its own length counter (independent decode positions)
+        c1 = bundle.init_caches(1, max_len=max_len, n_chunks=n_chunks)
+        R = pool.n_replicas
+        self.caches = jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (R, n_slots) + l.shape) + 0,
+            c1)
+
+        def prefill_fn(params, slot_caches, tokens):
+            with shrules.sharding_rules(self._rules):
+                def one(p, c):
+                    return bundle.prefill(p, {"tokens": tokens}, c)
+                return jax.vmap(one)(params, slot_caches)
+
+        def decode_fn(params, caches, toks):
+            with shrules.sharding_rules(self._rules):
+                def one_rep(p, c_r):
+                    def one_slot(c_s, t):
+                        return bundle.decode(p, c_s, {"token": t})
+                    return jax.vmap(one_slot)(c_r, toks)
+                logits, caches = jax.vmap(one_rep)(params, caches)
+                return logits[..., 0, :], caches    # [R, n_slots, V]
+
+        self._jprefill = jax.jit(prefill_fn)
+        self._jdecode = jax.jit(decode_fn, donate_argnums=1)
+
+        # metrics
+        self.committed = 0
+        self.decode_s = 0.0
+        self.reads = 0
+        self.disagreement_sum = 0.0
+        self.ejections: list[tuple[int, int]] = []   # (read idx, replica)
+        self.retries = 0
+        self.requests: list[Request] = []
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, prompt, max_new: int = 8,
+               deadline_ms: float | None = None) -> Request:
+        req = self.batcher.submit(prompt, max_new=max_new,
+                                  deadline_ms=deadline_ms)
+        self.requests.append(req)
+        return req
+
+    # -- quorum read (+ detector, + retry-on-ejection) ---------------------
+    def _read(self, logits) -> np.ndarray:
+        """One quorum read of per-replica logits ``[R, n_slots, V]`` ->
+        committed token per slot ``[n_slots]``, applying the detector and
+        retrying the read without any replica it ejects."""
+        mask = self.pool.active.copy()
+        answer = quorum.quorum_logits(logits, self.pool.f, mask=mask)
+        dist = self.detector.distances(logits, answer)
+        newly = [i for i in self.detector.observe(dist, mask)
+                 if self.pool.deactivate(i)]
+        if newly:
+            self.ejections.extend((self.detector.reads, i) for i in newly)
+            self.retries += 1
+            mask = self.pool.active.copy()    # retry against the honest rest
+        toks = quorum.quorum_tokens(logits, self.pool.f, self.rule, mask=mask)
+        self.reads += 1
+        self.disagreement_sum += quorum.disagreement(
+            logits, toks, mask=mask)
+        return np.asarray(toks)
+
+    # -- device loop -------------------------------------------------------
+    def _prefill_into(self, req: Request) -> int:
+        """Prefill ``req`` into its slot on every replica; quorum-read and
+        commit the first generated token."""
+        if len(req.prompt) + req.max_new + 1 > self.max_len:
+            raise ValueError(f"request {req.rid}: prompt+max_new exceeds "
+                             f"max_len={self.max_len}")
+        s = req.slot
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]      # [1, P]
+        slot = jax.tree.map(lambda big: big[:, s], self.caches)
+        logits, slot = self._jprefill(self.pool.params, slot, tokens)
+        self.caches = jax.tree.map(
+            lambda big, c: big.at[:, s].set(c), self.caches, slot)
+        tok = int(self._read(logits)[0])    # prefill logits are [R, 1, V]
+        req.out_tokens.append(tok)
+        self.committed += 1
+        return tok
+
+    def step(self) -> bool:
+        """One service tick: expire deadlines, refill slots (prefill), decode
+        one token on every replica x slot, quorum-commit. Returns False when
+        fully idle."""
+        self.batcher.expire()
+        for req in self.batcher.fill():
+            t0 = time.perf_counter()
+            self._prefill_into(req)
+            self.decode_s += time.perf_counter() - t0
+            if len(req.out_tokens) >= req.max_new:
+                self.batcher.finish(req)
+        running = self.batcher.running
+        if not running:
+            return not self.batcher.idle
+        last = np.zeros((self.batcher.n_slots, 1, 1), np.int32)
+        for r in running:
+            last[r.slot, 0, 0] = r.out_tokens[-1]
+        t0 = time.perf_counter()
+        logits, self.caches = self._jdecode(
+            self.pool.params, self.caches, jnp.asarray(last))
+        toks = self._read(logits)
+        self.decode_s += time.perf_counter() - t0
+        for r in running:
+            r.out_tokens.append(int(toks[r.slot]))
+            self.committed += 1
+            if len(r.out_tokens) >= r.max_new:
+                self.batcher.finish(r)
+        return not self.batcher.idle
+
+    def generate(self, prompts, max_new: int = 8,
+                 deadline_ms: float | None = None) -> list[list[int]]:
+        """Convenience driver: submit all prompts, run to idle, return each
+        request's committed continuation (token ids)."""
+        reqs = [self.submit(p, max_new=max_new, deadline_ms=deadline_ms)
+                for p in prompts]
+        while self.step():
+            pass
+        return [r.out_tokens for r in reqs]
+
+    # -- metrics -----------------------------------------------------------
+    def report(self) -> dict:
+        done = [r for r in self.requests if r.t_done is not None]
+        lat = [r.latency_s for r in done]
+        return {
+            "rule": self.rule,
+            "n_replicas": self.pool.n_replicas,
+            "n_active": self.pool.n_active,
+            "f": self.pool.f,
+            "committed_tokens": self.committed,
+            "tok_s": self.committed / max(self.decode_s, 1e-9),
+            "reads": self.reads,
+            "disagreement_rate": self.disagreement_sum / max(self.reads, 1),
+            "ejections": list(self.ejections),
+            "retries": self.retries,
+            "refills": self.batcher.refills,
+            "rejected": self.batcher.rejected,
+            "requests": {
+                "total": len(self.requests),
+                "done": sum(r.status == "done" for r in self.requests),
+                "deadline": sum(r.status == "deadline" for r in self.requests),
+                "latency_s_mean": float(np.mean(lat)) if lat else None,
+            },
+            "replicas": [
+                {"id": i, "active": bool(self.pool.active[i]),
+                 "flagged": bool(self.detector.flagged[i]),
+                 "strikes": int(self.detector.strikes[i])}
+                for i in range(self.pool.n_replicas)
+            ],
+        }

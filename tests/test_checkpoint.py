@@ -56,6 +56,30 @@ def test_median_restore_outvotes_corruption(tmp_path):
     assert bool(jnp.all(w <= jnp.max(state["params"]["w"][:4], 0) + 1e-6))
 
 
+def test_latest_step_ignores_stray_entries(tmp_path):
+    """Stray files, malformed step names, and .tmp leftovers must not break
+    (or win) the latest-step scan."""
+    d = str(tmp_path / "ckpt")
+    ck.save(d, 3, make_state())
+    # stray non-checkpoint content a killed job / operator might leave behind
+    (tmp_path / "ckpt" / "README.txt").write_text("notes")
+    (tmp_path / "ckpt" / "step_notanumber").mkdir()
+    (tmp_path / "ckpt" / "step_00000009.tmp").mkdir()        # killed save
+    (tmp_path / "ckpt" / "step_00000007").mkdir()            # no manifest
+    assert ck.latest_step(d) == 3
+
+
+def test_save_gcs_orphan_tmp_dirs(tmp_path):
+    d = tmp_path / "ckpt"
+    d.mkdir()
+    orphan = d / "step_00000005.tmp"
+    orphan.mkdir()
+    (orphan / "junk.npy").write_bytes(b"\x00")
+    ck.save(str(d), 6, make_state())
+    assert not any(e.endswith(".tmp") for e in os.listdir(d))
+    assert ck.latest_step(str(d)) == 6
+
+
 def test_elastic_reshard(tmp_path):
     """Restore onto a different sharding (here: default single-device) —
     logical shapes are the contract, not device layout."""

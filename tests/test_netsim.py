@@ -163,3 +163,69 @@ class TestTraceDelivery:
             TraceDelivery(np.zeros((5, 7, 4), np.int32),
                           np.zeros((5, 5, 5), np.int32),
                           np.zeros((0, 5, 4), np.int32), T=10)
+
+
+# ---------------------------------------------------------------------------
+# request floods (serving-side netsim: repro.netsim.flood)
+# ---------------------------------------------------------------------------
+
+
+class TestRequestFlood:
+    def test_deterministic_per_seed(self):
+        from repro.netsim import run_flood
+        sc = scenarios.request_flood(n_clients=200, rate=2.0, seed=3)
+        a, b = run_flood(sc), run_flood(sc)
+        assert a.n_requests == b.n_requests
+        np.testing.assert_array_equal(a.quorum_ms, b.quorum_ms)
+        assert a.ledger == b.ledger
+        c = run_flood(scenarios.request_flood(n_clients=200, rate=2.0,
+                                              seed=4))
+        assert not np.array_equal(a.quorum_ms, c.quorum_ms)
+
+    def test_accounting_invariants(self):
+        from repro.netsim import run_flood
+        sc = scenarios.request_flood(n_clients=300, rate=2.0, seed=0)
+        tr = run_flood(sc)
+        led, Rn = tr.ledger, sc.n_replicas
+        # every request reaches every replica; every reply is consumed or late
+        push, pull = led.c["push"], led.c["pull"]
+        assert push["tx_msgs"].sum() == tr.n_requests * Rn
+        assert push["rx_msgs"][:Rn].sum() == tr.n_requests * Rn
+        assert pull["tx_msgs"][:Rn].sum() == tr.n_requests * Rn
+        assert (pull["rx_msgs"].sum() + pull["late_msgs"].sum()
+                == tr.n_requests * Rn)
+        # exactly f late replies per request can't exceed the tail count
+        assert pull["late_msgs"].sum() == tr.replica_late.sum()
+        # clients only ever appear past the replica ids
+        assert push["tx_msgs"][:Rn].sum() == 0
+        assert pull["rx_msgs"][:Rn].sum() == 0
+
+    def test_slow_replica_absorbed_by_quorum(self):
+        from repro.netsim import run_flood
+        base = run_flood(scenarios.request_flood(n_clients=400, seed=1))
+        slow = run_flood(scenarios.request_flood(
+            n_clients=400, seed=1, slow_replicas=(0,), slow_factor=50.0))
+        # the slow replica goes fully late; read latency barely moves
+        assert slow.replica_late[0] == slow.n_requests
+        assert slow.percentiles()["p50"] < 4 * base.percentiles()["p50"] + 1.0
+        assert slow.replica_busy_ms[0] > 10 * base.replica_busy_ms[0]
+
+    def test_scenario_validation_and_registry_isolation(self):
+        from repro.netsim.flood import RequestFloodScenario
+        with pytest.raises(ValueError):
+            RequestFloodScenario(n_replicas=2, f=1)       # n < 2f+1
+        with pytest.raises(ValueError):
+            RequestFloodScenario(slow_replicas=(9,))
+        # serving floods are not trainable scenarios: outside SCENARIOS
+        assert "request_flood" not in scenarios.SCENARIOS
+        sc = scenarios.request_flood(n_clients=10)
+        assert sc.n_clients == 10
+
+    def test_deadline_and_percentiles(self):
+        from repro.netsim import run_flood
+        sc = scenarios.request_flood(n_clients=300, seed=2, deadline_ms=0.1)
+        tr = run_flood(sc)
+        assert tr.deadline_missed == tr.n_requests     # nothing beats 0.1ms
+        pc = tr.percentiles((50, 95, 99))
+        assert pc["p50"] <= pc["p95"] <= pc["p99"]
+        assert "deadline" in tr.summary()

@@ -1,0 +1,269 @@
+"""repro.serve: quorum reads, divergence detector, batcher, service, ckpt."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.agg as agg
+import repro.exp as exp
+from repro.checkpoint import checkpointer as ck
+from repro.core.attacks import MODEL_ATTACKS, ByzantineSpec, inject_models
+from repro.models.registry import get_bundle
+from repro.serve import (DetectorConfig, DivergenceDetector, QuorumService,
+                         ReplicaPool, disagreement, quorum_tokens)
+from repro.serve.batcher import ContinuousBatcher
+
+R, F = 4, 1
+
+
+# ---------------------------------------------------------------------------
+# read rules
+# ---------------------------------------------------------------------------
+
+
+def test_vote_rule_plurality():
+    x = jnp.asarray([[3, 7], [3, 9], [5, 9], [3, 9]], jnp.int32)
+    out = agg.get("vote")(x, 1)
+    assert out.tolist() == [3, 9]
+    # concrete-mask subset semantics
+    m = np.asarray([True, False, True, True])
+    sub = agg.get("vote")(x, 1, mask=m)
+    assert sub.tolist() == agg.get("vote")(x[m], 1).tolist()
+
+
+@pytest.mark.parametrize("attack", sorted(MODEL_ATTACKS))
+@pytest.mark.parametrize("rule", ("median", "vote"))
+def test_quorum_reads_survive_every_model_attack(attack, rule):
+    key = jax.random.PRNGKey(0)
+    honest = jax.random.normal(key, (2, 16))          # [B, V] logits
+    stack = jnp.broadcast_to(honest, (R,) + honest.shape) + 0
+    spec = ByzantineSpec(server_attack=attack, n_byz_servers=F)
+    corrupted = inject_models({"logits": stack}, spec,
+                              jax.random.PRNGKey(1))["logits"]
+    toks = quorum_tokens(corrupted, F, rule=rule)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(honest, -1)))
+
+
+def test_disagreement_metric():
+    honest = jax.random.normal(jax.random.PRNGKey(2), (3, 8))
+    stack = jnp.broadcast_to(honest, (R,) + honest.shape) + 0
+    toks = quorum_tokens(stack, F)
+    assert disagreement(stack, toks) == 0.0
+    flipped = stack.at[-1].set(-stack[-1])
+    toks = quorum_tokens(flipped, F)
+    assert disagreement(flipped, toks) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# divergence detector
+# ---------------------------------------------------------------------------
+
+
+def test_detector_ejects_attacker_within_patience_reads():
+    det = DivergenceDetector(R, F, DetectorConfig(patience=3))
+    active = np.ones(R, bool)
+    dist = np.array([0.0, 0.0, 0.0, 1.0])
+    assert det.observe(dist, active) == []
+    assert det.observe(dist, active) == []
+    assert det.observe(dist, active) == [3]       # k = patience reads
+    assert det.flagged[3] and not det.flagged[:3].any()
+
+
+def test_detector_never_ejects_honest_on_clean_runs():
+    det = DivergenceDetector(R, F)
+    rng = np.random.default_rng(0)
+    active = np.ones(R, bool)
+    for _ in range(50):
+        dist = 1.0 + 0.05 * rng.standard_normal(R)  # honest envelope jitter
+        assert det.observe(dist, active) == []
+    assert not det.flagged.any()
+
+
+def test_detector_respects_quorum_floor():
+    det = DivergenceDetector(3, 1, DetectorConfig(patience=1))
+    active = np.ones(3, bool)
+    ejected = det.observe(np.array([0.0, 0.0, 5.0]), active)
+    assert ejected == []                          # 3 - 1 < 2f+1 = 3
+    assert det.flagged[2]                         # still flagged, not ejected
+
+
+# ---------------------------------------------------------------------------
+# replica pool
+# ---------------------------------------------------------------------------
+
+
+def _tiny_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (4, 3)),
+            "b": jax.random.normal(k2, (3,))}
+
+
+def test_replica_pool_constructors_and_validation():
+    p = _tiny_params(jax.random.PRNGKey(0))
+    pool = ReplicaPool.from_params(p, R, f=F)
+    assert pool.n_replicas == R and pool.n_active == R
+    assert pool.quorum_floor == 2 * F + 1
+    stacked = jax.tree.map(lambda l: jnp.stack([l] * R), p)
+    pool2 = ReplicaPool.from_stacked(stacked, f=F)
+    assert pool2.n_replicas == R
+    for a, b in zip(jax.tree.leaves(pool.single(2)), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="2f"):
+        ReplicaPool.from_params(p, 2, f=1)        # n < 2f+1
+    with pytest.raises(ValueError, match="active"):
+        ReplicaPool(params=stacked, f=F, active=np.ones(R + 1, bool))
+
+
+def test_consolidated_outvotes_corruption():
+    p = _tiny_params(jax.random.PRNGKey(1))
+    pool = ReplicaPool.from_params(p, 5, f=2).corrupt(
+        ByzantineSpec(server_attack="reversed", n_byz_servers=2),
+        jax.random.PRNGKey(2))
+    for a, b in zip(jax.tree.leaves(pool.consolidated()),
+                    jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="tolerance"):
+        ReplicaPool.from_params(p, 5, f=1).corrupt(
+            ByzantineSpec(server_attack="random", n_byz_servers=2),
+            jax.random.PRNGKey(3))
+
+
+def test_deactivate_respects_floor():
+    p = _tiny_params(jax.random.PRNGKey(4))
+    pool = ReplicaPool.from_params(p, R, f=F)
+    assert pool.deactivate(3)
+    assert pool.n_active == 3
+    assert not pool.deactivate(2)                 # would break 2f+1
+    assert not pool.deactivate(3)                 # already out
+
+
+# ---------------------------------------------------------------------------
+# batcher (host-side)
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_admission_queue_and_refill():
+    b = ContinuousBatcher(n_slots=2, max_queue=2)
+    r1, r2 = b.submit([1]), b.submit([2])
+    assert [r.rid for r in b.fill()] == [0, 1]
+    r3, r4 = b.submit([3]), b.submit([4])
+    r5 = b.submit([5])
+    assert r5.status == "rejected" and b.rejected == 1
+    assert b.fill() == []                         # slots full
+    b.finish(r1)
+    placed = b.fill()
+    assert placed == [r3] and b.refills == 1
+    assert b.pending == 1 and not b.idle
+    b.finish(r2), b.finish(r3)
+    b.fill()
+    b.finish(r4)
+    assert b.idle
+
+
+def test_batcher_deadline_expiry():
+    b = ContinuousBatcher(n_slots=1)
+    req = b.submit([1, 2], deadline_ms=0.0)
+    b.fill()
+    hit = b.expire()
+    assert hit == [req] and req.status == "deadline"
+    assert not req.deadline_met and req.latency_s is not None
+    assert b.slots[0] is None
+
+
+# ---------------------------------------------------------------------------
+# quorum service (transformer decode path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return get_bundle("phi4-mini-3.8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def tparams(bundle):
+    return bundle.init(jax.random.PRNGKey(0))
+
+
+def _gen(pool, bundle, prompts, max_new, **kw):
+    svc = QuorumService(pool, bundle, n_slots=2, max_len=32, **kw)
+    return svc.generate(prompts, max_new=max_new), svc
+
+
+def test_service_token_identity_with_byzantine_replica(bundle, tparams):
+    prompts = [[3, 5, 7], [11, 2, 4], [9, 9, 1]]   # 3 requests, 2 slots
+    base, _ = _gen(ReplicaPool.from_params(tparams, 1, f=0), bundle,
+                   prompts, 5)
+    pool = ReplicaPool.from_params(tparams, R, f=F).corrupt(
+        ByzantineSpec(server_attack="lie", n_byz_servers=1),
+        jax.random.PRNGKey(5))
+    outs, svc = _gen(pool, bundle, prompts, 5)
+    assert outs == base                           # token-identical
+    rep = svc.report()
+    assert rep["refills"] >= 1                    # continuous batching kicked in
+    assert [i for _, i in rep["ejections"]] == [R - 1]
+    assert rep["n_active"] == R - 1
+    assert rep["requests"]["done"] == 3
+
+
+def test_service_clean_run_never_ejects(bundle, tparams):
+    outs, svc = _gen(ReplicaPool.from_params(tparams, R, f=F), bundle,
+                     [[1, 2, 3]], 4)
+    rep = svc.report()
+    assert rep["ejections"] == [] and rep["disagreement_rate"] == 0.0
+    assert len(outs[0]) == 4
+
+
+def test_service_deadline_truncates(bundle, tparams):
+    pool = ReplicaPool.from_params(tparams, 1, f=0)
+    svc = QuorumService(pool, bundle, n_slots=1, max_len=64)
+    req = svc.submit([1, 2, 3], max_new=30, deadline_ms=0.0)
+    while svc.step():
+        pass
+    assert req.status == "deadline"
+    assert 0 < len(req.out_tokens) < 30
+    assert svc.report()["requests"]["deadline"] == 1
+
+
+def test_service_rejects_vlm_family():
+    vlm = get_bundle("qwen2-vl-7b", reduced=True)
+    p = _tiny_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="token-in"):
+        QuorumService(ReplicaPool.from_params(p, 1, f=0), vlm)
+
+
+# ---------------------------------------------------------------------------
+# spec-integrated checkpointing round trip
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_spec_validation():
+    with pytest.raises(ValueError, match="protocol"):
+        exp.Experiment(name="x", ckpt_every=5)    # default runner is fused
+    with pytest.raises(ValueError, match="ckpt_every"):
+        exp.get("serve/ckpt_smoke", ckpt_every=None, ckpt_dir="/tmp/x")
+    e = exp.get("serve/ckpt_lie_server")
+    assert exp.Experiment.from_dict(e.to_dict()) == e
+
+
+def test_protocol_ckpt_roundtrip_into_pool(tmp_path):
+    d = os.path.join(str(tmp_path), "ck")
+    res = exp.run("serve/ckpt_smoke", steps=6, ckpt_every=3, ckpt_dir=d)
+    assert ck.latest_step(d) == 6 and sorted(os.listdir(d)) == \
+        ["step_00000003", "step_00000006"]
+    e = exp.get("serve/ckpt_smoke")
+    init_fn, _, _ = e.build_problem()
+    pool = ReplicaPool.from_checkpoint(d, init_fn, f=1)
+    assert pool.n_replicas == e.n_servers
+    for a, b in zip(jax.tree.leaves(pool.params),
+                    jax.tree.leaves(res.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # chunked checkpoint emission trains bit-identically to one fused run
+    res2 = exp.run("serve/ckpt_smoke", steps=6, ckpt_every=None,
+                   ckpt_dir=None)
+    for a, b in zip(jax.tree.leaves(res.state.params),
+                    jax.tree.leaves(res2.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
