@@ -2,10 +2,25 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 test fast netsim agg-bench bench examples perf exp serve serve-bench
+.PHONY: all tier1 test fast lint lint-fast netsim agg-bench bench examples perf exp serve serve-bench
+
+# default: static analysis first (seconds to fail on a repo-invariant
+# violation), then the full tier-1 gate
+all: lint tier1
 
 # alias so `make test` means the tier-1 gate
 test: tier1
+
+# static analysis, both layers: AST repo-invariant lint + compiled-artifact
+# audit on a forced 8-device CPU topology. Exits 1 on any violation that is
+# neither inline-suppressed nor in results/analyze/baseline.json (committed
+# empty — the repo lints clean).
+lint:
+	$(ENV) $(PY) -m repro.analyze --hlo --json results/analyze/report.json
+
+# layer 1 only (jax-free, sub-second) — pre-commit speed
+lint-fast:
+	$(ENV) $(PY) -m repro.analyze
 
 # full tier-1 gate: everything, stop at first failure
 tier1:

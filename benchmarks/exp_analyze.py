@@ -1,0 +1,57 @@
+"""Benchmark lane: the full static-analysis audit as a CI artifact.
+
+Runs ``python -m repro.analyze --hlo`` in a subprocess (the forced
+8-device CPU topology must be set before jax initialises, so the audit
+cannot share this process) and republishes its report —
+``results/analyze/report.json``, provenance included — as the lane
+result. A non-empty violation list fails the lane the same way a perf
+regression fails the throughput lane.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+REPORT = os.path.join("results", "analyze", "report.json")
+
+
+def run(quick: bool = True) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath("src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)   # let the CLI force its 8-device topology
+    # both scales run the full two-layer audit; "quick" has nothing to cut
+    cmd = [sys.executable, "-m", "repro.analyze", "--hlo", "--json", REPORT]
+    t0 = time.time()
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1800)
+    wall = time.time() - t0
+    if not os.path.exists(REPORT):
+        return {"clean": False, "wall_s": wall, "exit": proc.returncode,
+                "error": (proc.stderr or proc.stdout)[-2000:]}
+    with open(REPORT) as f:
+        doc = json.load(f)
+    return {"clean": doc["clean"], "wall_s": wall, "exit": proc.returncode,
+            "violations": doc["violations"], "baselined": doc["baselined"],
+            "rules_run": doc["stats"].get("rules_run", []),
+            "files_linted": doc["stats"].get("files_linted"),
+            "report": REPORT}
+
+
+def summarize(res: dict) -> str:
+    if "error" in res:
+        return f"[analyze] FAILED to produce a report: {res['error'][:200]}"
+    state = "clean" if res["clean"] else \
+        f"{len(res['violations'])} violation(s)"
+    return (f"[analyze] {state}  rules={len(res['rules_run'])} "
+            f"files={res['files_linted']}  ({res['wall_s']:.0f}s)"
+            f"  -> {res['report']}")
+
+
+if __name__ == "__main__":
+    r = run()
+    print(summarize(r))
+    raise SystemExit(0 if r.get("clean") else 1)

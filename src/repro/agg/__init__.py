@@ -21,8 +21,8 @@ table used in the README.
 from __future__ import annotations
 
 from . import dispatch, registry, rules, tree
-from .dispatch import (cwise_median, default_backend, pairwise_sqdists,
-                       resolve_backend, subset_diameters)
+from .dispatch import (backend_override, cwise_median, default_backend,
+                       pairwise_sqdists, resolve_backend, subset_diameters)
 from .registry import Aggregator, get, markdown_table, names, register, specs
 from .tree import selection_weights, tree_agg, tree_gram
 
@@ -34,7 +34,8 @@ def aggregate(rule, x, f: int = 0, **kw):
 
 
 __all__ = [
-    "Aggregator", "aggregate", "cwise_median", "default_backend", "dispatch",
+    "Aggregator", "aggregate", "backend_override", "cwise_median",
+    "default_backend", "dispatch",
     "get", "markdown_table", "names", "pairwise_sqdists", "register",
     "registry", "resolve_backend", "rules", "selection_weights",
     "specs", "subset_diameters", "tree", "tree_agg", "tree_gram",

@@ -23,6 +23,7 @@ whole process. Numerical equivalence of both backends is enforced by
 from __future__ import annotations
 
 import os
+from contextlib import contextmanager
 from functools import partial
 
 import jax
@@ -38,6 +39,33 @@ _MEDIAN_KERNEL_MAX_N = 64
 
 def default_backend() -> str:
     return os.environ.get("REPRO_AGG_BACKEND", "auto")
+
+
+@contextmanager
+def backend_override(backend: str | None):
+    """Exception-safe process-default backend override.
+
+    Sets ``REPRO_AGG_BACKEND`` for the dynamic extent of the block and
+    restores the previous value (or absence) on ANY exit path. This is the
+    sanctioned way to scope the default — bare ``os.environ[...] =``
+    mutations leak state across runs when the block raises, and are linted
+    against (REPRO-ENV-MUTATE). ``backend=None`` is a no-op, so callers can
+    pass an optional spec field straight through.
+    """
+    if backend is None:
+        yield
+        return
+    if backend not in _VALID:
+        raise ValueError(f"unknown backend {backend!r}; choose from {_VALID}")
+    prev = os.environ.get("REPRO_AGG_BACKEND")
+    os.environ["REPRO_AGG_BACKEND"] = backend
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_AGG_BACKEND", None)
+        else:
+            os.environ["REPRO_AGG_BACKEND"] = prev
 
 
 def resolve_backend(backend: str | None = None, *,

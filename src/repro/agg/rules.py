@@ -220,8 +220,20 @@ _NETWORK_MAX_N = 32
 # order-statistic rules back through XLA's jnp.sort — bitwise jnp.sort
 # semantics for debugging, and the honest "seed hot path" lane of
 # benchmarks/exp_throughput.py. Flipping it only affects traces compiled
-# afterwards.
-_SORT_NETWORK = os.environ.get("REPRO_SORT_NETWORK", "1") != "0"
+# afterwards. The env var is resolved at CALL time (an import-time read
+# would freeze the flag before tests/overrides can set it and poison the
+# engines' compile-cache keys — REPRO-ENV-IMPORT); use_sort_network()
+# takes precedence over the environment while active.
+_SORT_NETWORK: bool | None = None    # None = defer to the environment
+
+
+def sort_network_enabled() -> bool:
+    """Current sort-network setting: the use_sort_network() override if one
+    is active, else the REPRO_SORT_NETWORK environment default. Engines fold
+    this into their compile-cache keys."""
+    if _SORT_NETWORK is not None:
+        return _SORT_NETWORK
+    return os.environ.get("REPRO_SORT_NETWORK", "1") != "0"
 
 
 @contextmanager
@@ -268,7 +280,7 @@ def sort_stack(x: jax.Array) -> jax.Array:
     n = x.shape[0]
     if n <= 1:
         return x
-    if n > _NETWORK_MAX_N or not _SORT_NETWORK:
+    if n > _NETWORK_MAX_N or not sort_network_enabled():
         return jnp.sort(x, axis=0)
     # min/max would smear a single NaN across every rank; map NaN to the
     # finite _BIG sentinel first so Byzantine NaN payloads sort last exactly

@@ -1,0 +1,27 @@
+"""``repro.analyze`` — repo-invariant lint + compiled-artifact audit.
+
+The repo's claims live in two places: the source (no host syncs inside
+compiled bodies, cache keys covering every knob, Table-1 bounds in every
+preset, registry/test parity) and the compiled artifacts (donation kept,
+one host transfer per run, modeled collective bytes matching what XLA
+emits). ``python -m repro.analyze`` checks the first set by parsing —
+never importing — the tree (layer 1); ``--hlo`` additionally lowers the
+real engines on a forced multi-device CPU mesh and audits the executables
+(layer 2). CI gates on a zero-violation committed baseline
+(``results/analyze/baseline.json``); see the README "Static analysis"
+section for the rule table and suppression syntax.
+"""
+from __future__ import annotations
+
+from .astlint import LINT_ROOTS, lint_file, lint_paths, lint_repo
+from .findings import (BASELINE_PATH, REPORT_PATH, Finding, load_baseline,
+                       markdown_report, split_baselined, to_report,
+                       write_baseline, write_report)
+from .registry import Rule, get, markdown_table, register, rules
+
+__all__ = [
+    "BASELINE_PATH", "Finding", "LINT_ROOTS", "REPORT_PATH", "Rule", "get",
+    "lint_file", "lint_paths", "lint_repo", "load_baseline",
+    "markdown_report", "markdown_table", "register", "rules",
+    "split_baselined", "to_report", "write_baseline", "write_report",
+]

@@ -1,0 +1,113 @@
+"""Layer-1 driver: walk the lint roots, parse, run file/repo rules.
+
+Purely static — this module never imports the code it checks. Fixture
+trees (``tests/``) are excluded from the default roots so rule-tripping
+fixtures in ``tests/test_analyze.py`` don't flag the repo; the analyzer
+package itself IS linted (rules quote sync-call names as strings, not
+calls, precisely so they pass their own checks).
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from .findings import Finding, is_suppressed, scan_suppressions
+from .registry import rules
+
+LINT_ROOTS = ("src/repro", "benchmarks", "examples")
+_SKIP_DIRS = {"__pycache__", ".git", "results"}
+
+
+def lint_paths(root: str) -> list[str]:
+    out = []
+    for lr in LINT_ROOTS:
+        base = os.path.join(root, lr)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def lint_file(path: str, root: str, source: str | None = None,
+              scoped_rules=None) -> list[Finding]:
+    """Run every file-scope rule on one file; apply inline suppressions."""
+    if source is None:
+        with open(path) as f:
+            source = f.read()
+    rel = os.path.relpath(path, root)
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as e:
+        return [Finding("REPRO-PARSE", rel, e.lineno or 0,
+                        f"file does not parse: {e.msg}")]
+    sups, bad_sups = scan_suppressions(source, rel)
+    found: list[Finding] = list(bad_sups)
+    for rule in (scoped_rules if scoped_rules is not None
+                 else rules(scope="file")):
+        for f in rule.check(tree, source, rel):
+            if not is_suppressed(f, sups):
+                found.append(f)
+    return found
+
+
+def lint_repo(root: str, include_repo_rules: bool = True) -> list[Finding]:
+    """Layer 1 over the whole tree: all file rules + repo-scope rules."""
+    found: list[Finding] = []
+    for path in lint_paths(root):
+        found.extend(lint_file(path, root))
+    if include_repo_rules:
+        for rule in rules(scope="repo"):
+            found.extend(rule.check(root))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def call_name(node: ast.Call) -> str:
+    """Dotted name of a call target: ``jax.lax.scan`` -> 'jax.lax.scan'."""
+    return dotted_name(node.func)
+
+
+def dotted_name(node: ast.AST) -> str:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def literal_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def self_attr_reads(node: ast.AST) -> set[str]:
+    """All ``self.X`` attribute names read anywhere under ``node``."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name)
+                and n.value.id == "self"):
+            out.add(n.attr)
+    return out
+
+
+def self_method_calls(node: ast.AST) -> set[str]:
+    """Names of ``self.m(...)`` calls under ``node``."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and isinstance(n.func.value, ast.Name)
+                and n.func.value.id == "self"):
+            out.add(n.func.attr)
+    return out

@@ -1,0 +1,390 @@
+"""Layer 2 — compiled-artifact audit (``python -m repro.analyze --hlo``).
+
+Layer 1 reads source; this layer reads what XLA actually compiled. Each
+rule lowers real repo entry points (the ``smoke`` preset through the fused
+and protocol engines, one serve decode step) on the current devices and
+audits the artifacts:
+
+* **REPRO-HLO-DONATION** — every donated buffer must survive to the
+  executable's ``input_output_alias`` table (parsed by
+  ``repro.launch.hlo_analysis.donation_aliases``). A donation XLA silently
+  drops is a 2x state-memory regression that no test fails on.
+* **REPRO-HLO-HOST-TRANSFER** — ``EpochRunner.run`` promises ONE
+  device->host transfer per run (PR 3); counted by patching
+  ``jax.device_get``, and the per-epoch body is additionally run under
+  ``jax.transfer_guard_device_to_host("disallow")``.
+* **REPRO-HLO-RECOMPILE** — the semantic compile cache must dedupe
+  identical engine configs and split distinct ones; swept against the
+  ``repro.core.epochs.epoch_build_count()`` sentinel.
+* **REPRO-HLO-COLLECTIVES** — ``collective_volume_bytes``'s modeled
+  exchange bytes must match ring-model traffic measured from the compiled
+  HLO of the exchange primitives (``masked_pull`` + ``aggregate_gradients``)
+  within 10%, for BOTH collective engines. This audit is how the original
+  "sharded moves ~2·P" model was caught being 4x off.
+
+Rules run meaningfully only on a multi-device mesh: the CLI's ``--hlo``
+flag forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before
+jax imports. Under fewer devices each rule reports one setup finding
+rather than pretending to pass. All jax imports live inside the checks so
+layer 1 stays import-free.
+"""
+from __future__ import annotations
+
+from .findings import Finding
+from .registry import Rule, register
+
+#: the audited preset: G=5 co-located groups, mlp_h32 / mixture5_small
+_PRESET = "smoke"
+_MIN_DEVICES = 5
+_COLLECTIVE_RTOL = 0.10
+_HLO = "<hlo-audit>"        # findings are about artifacts, not one file
+
+
+def _device_guard(rule_id: str) -> list[Finding]:
+    """One setup finding when the forced-device lane isn't active."""
+    import jax
+    n = len(jax.devices())
+    if n >= _MIN_DEVICES:
+        return []
+    return [Finding(
+        rule_id, _HLO, 0,
+        f"audit needs >= {_MIN_DEVICES} devices for the protocol mesh, "
+        f"have {n}",
+        "run via `python -m repro.analyze --hlo` (forces "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8)")]
+
+
+def _spec_flags(e):
+    """The spec's backend/sort-network knobs, applied around engine
+    construction exactly as ``repro.exp.runners.run`` applies them (the
+    compile-cache key reads both at build time)."""
+    from contextlib import ExitStack
+
+    from ..agg.dispatch import backend_override
+    from ..agg.rules import use_sort_network
+    stack = ExitStack()
+    stack.enter_context(backend_override(e.agg_backend))
+    stack.enter_context(use_sort_network(e.sort_network))
+    return stack
+
+
+def _protocol_engine(engine: str, **overrides):
+    """The smoke preset on the protocol runner: (exp, pcfg, mesh, eng,
+    state, stream)."""
+    import jax
+    from ..core import protocol as _protocol
+    from ..data.pipeline import DeviceBatchStream
+    from ..exp import presets
+    from ..launch.mesh import make_protocol_mesh, use_mesh
+    e = presets.get(_PRESET, runner="protocol", protocol_engine=engine,
+                    **overrides)
+    pcfg = e.to_protocol_config()
+    init_fn, loss_fn, acc = e.build_problem()
+    bundle = _protocol.ProblemBundle(init=init_fn, loss=loss_fn)
+    mesh = make_protocol_mesh(pcfg.n_groups)
+    stream = DeviceBatchStream(e.seed, e.mixture, pcfg.n_groups, e.batch)
+    ex, ey = stream.eval_set(e.eval_n)
+    with _spec_flags(e), use_mesh(mesh):
+        eng = _protocol.ProtocolEngine(
+            bundle, pcfg, e.build_schedule(), mesh=mesh, acc_fn=acc,
+            eval_set=(ex, ey), metrics_every=e.metrics_every)
+        state = eng.init_state(jax.random.PRNGKey(e.seed))
+    return e, pcfg, mesh, eng, state, stream
+
+
+def _fused_engine(**overrides):
+    """The smoke preset on the fused runner: (exp, eng, state, stream)."""
+    import jax
+    from ..core.engine import EpochEngine
+    from ..data.pipeline import DeviceBatchStream
+    from ..exp import presets
+    e = presets.get(_PRESET, runner="fused", **overrides)
+    sim = e.build_sim(None)
+    _, _, acc = e.build_problem()
+    state = sim.init_state(jax.random.PRNGKey(e.seed))
+    stream = DeviceBatchStream(e.seed, e.mixture, sim.cfg.n_workers, e.batch)
+    ex, ey = stream.eval_set(e.eval_n)
+    with _spec_flags(e):
+        eng = EpochEngine(sim, acc_fn=acc, eval_set=(ex, ey),
+                          metrics_every=e.metrics_every)
+    return e, eng, state, stream
+
+
+def _epoch_compiled_text(eng, state, stream, n_steps: int = 4) -> str:
+    """Compile one epoch without running it; returns executable HLO text."""
+    batches = stream.next(n_steps)
+    lowered = eng._epoch.lower(state, batches, *eng._extra_args())
+    return lowered.compile().as_text()
+
+
+def _alias_gap(txt: str, donated_params: range) -> list[int]:
+    from ..launch import hlo_analysis
+    aliased = hlo_analysis.aliased_param_numbers(txt)
+    return sorted(set(donated_params) - aliased)
+
+
+# ---------------------------------------------------------------------------
+# REPRO-HLO-DONATION
+# ---------------------------------------------------------------------------
+
+
+def check_donation(root) -> list[Finding]:
+    import jax
+    found = _device_guard("REPRO-HLO-DONATION")
+    if found:
+        return found
+
+    def audit(label, path, txt, donated_params):
+        gap = _alias_gap(txt, donated_params)
+        if gap:
+            found.append(Finding(
+                "REPRO-HLO-DONATION", path, 0,
+                f"{label}: donated buffers dropped from input_output_alias "
+                f"(param numbers {gap} of {donated_params.start}.."
+                f"{donated_params.stop - 1})",
+                "keep donated leaves' shape/dtype equal to the matching "
+                "outputs; check donate_argnums still names the state arg"))
+
+    # fused + both protocol engines: the whole carried state is donated
+    e, eng, state, stream = _fused_engine()
+    n_state = len(jax.tree.leaves(state))
+    audit("fused epoch", "src/repro/core/engine.py",
+          _epoch_compiled_text(eng, state, stream), range(n_state))
+    for engine in ("naive", "sharded"):
+        from ..launch.mesh import use_mesh
+        _, _, mesh, peng, pstate, pstream = _protocol_engine(engine)
+        n_state = len(jax.tree.leaves(pstate))
+        with use_mesh(mesh):
+            txt = _epoch_compiled_text(peng, pstate, pstream)
+        audit(f"protocol[{engine}] epoch", "src/repro/core/protocol.py",
+              txt, range(n_state))
+
+    # serve decode: the [R, n_slots, ...] cache stack is donated (arg 1)
+    from ..models.registry import get_bundle
+    from ..serve import QuorumService, ReplicaPool
+    bundle = get_bundle("phi4-mini-3.8b", reduced=True)
+    pool = ReplicaPool.from_params(bundle.init(jax.random.PRNGKey(0)), 3, f=1)
+    svc = QuorumService(pool, bundle, n_slots=2, max_len=32)
+    n_p = len(jax.tree.leaves(pool.params))
+    n_c = len(jax.tree.leaves(svc.caches))
+    audit("serve decode", "src/repro/serve/service.py",
+          svc.lowered_decode().compile().as_text(), range(n_p, n_p + n_c))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# REPRO-HLO-HOST-TRANSFER
+# ---------------------------------------------------------------------------
+
+
+def check_host_transfers(root) -> list[Finding]:
+    import jax
+    found = _device_guard("REPRO-HLO-HOST-TRANSFER")
+    if found:
+        return found
+
+    def audit(label, path, eng, state, stream, steps, mesh=None):
+        from contextlib import nullcontext
+
+        from ..launch.mesh import use_mesh
+        ctx = use_mesh(mesh) if mesh is not None else nullcontext()
+        counter = {"n": 0}
+        real = jax.device_get
+
+        def counting(x):
+            counter["n"] += 1
+            return real(x)
+
+        with ctx:
+            # the run loop: exactly ONE device_get regardless of chunking
+            jax.device_get = counting
+            try:
+                state, _ = eng.run(state, stream=stream, steps=steps,
+                                   epoch_steps=max(1, steps // 2))
+            finally:
+                jax.device_get = real
+            if counter["n"] != 1:
+                found.append(Finding(
+                    "REPRO-HLO-HOST-TRANSFER", path, 0,
+                    f"{label}: run() made {counter['n']} device_get calls "
+                    f"over {steps} steps (contract: exactly 1)",
+                    "keep metrics in on-device buffers; concatenate on host "
+                    "only once after the last epoch"))
+            # the epoch body itself: zero implicit transfers
+            try:
+                with jax.transfer_guard_device_to_host("disallow"):
+                    eng.run_epoch(state, stream.next(2))
+            except Exception as err:  # jax raises on guarded transfer
+                found.append(Finding(
+                    "REPRO-HLO-HOST-TRANSFER", path, 0,
+                    f"{label}: epoch body transfers device->host under "
+                    f"transfer_guard ({type(err).__name__})",
+                    "the compiled epoch must not sync; move host reads "
+                    "outside run_epoch"))
+
+    e, eng, state, stream = _fused_engine()
+    audit("fused", "src/repro/core/engine.py", eng, state, stream, e.steps)
+    _, _, mesh, peng, pstate, pstream = _protocol_engine("sharded")
+    audit("protocol[sharded]", "src/repro/core/protocol.py",
+          peng, pstate, pstream, 6, mesh=mesh)
+    return found
+
+
+# ---------------------------------------------------------------------------
+# REPRO-HLO-RECOMPILE
+# ---------------------------------------------------------------------------
+
+
+def check_recompiles(root) -> list[Finding]:
+    found = _device_guard("REPRO-HLO-RECOMPILE")
+    if found:
+        return found
+    from ..core import epochs
+
+    def builds(fn):
+        before = epochs.epoch_build_count()
+        fn()
+        return epochs.epoch_build_count() - before
+
+    # deterministic start: other audits have already populated the cache
+    # with these very configs
+    epochs.clear_epoch_cache()
+
+    first = builds(lambda: _fused_engine())
+    if first != 1:
+        found.append(Finding(
+            "REPRO-HLO-RECOMPILE", "src/repro/core/epochs.py", 0,
+            f"fresh fused config after cache clear produced {first} builds "
+            "(expected exactly 1)",
+            "the build-count sentinel in epochs._get_or_build is broken"))
+    # identical semantic config -> cache hit (no rebuild, no retrace)
+    dup = builds(lambda: _fused_engine())
+    if dup != 0:
+        found.append(Finding(
+            "REPRO-HLO-RECOMPILE", "src/repro/core/epochs.py", 0,
+            f"identical fused configs rebuilt the epoch ({dup} builds; "
+            "expected a cache hit)",
+            "make _cache_key cover exactly the semantic config — an "
+            "id()/object part in the key splits identical sweeps"))
+    # each semantically-distinct knob -> exactly one rebuild
+    for knob in ({"T": 3}, {"sort_network": False}, {"metrics_every": 1}):
+        n = builds(lambda: _fused_engine(**knob))
+        if n != 1:
+            found.append(Finding(
+                "REPRO-HLO-RECOMPILE", "src/repro/core/epochs.py", 0,
+                f"distinct fused config {knob} produced {n} builds "
+                "(expected exactly 1)",
+                "a knob missing from _cache_key reuses a stale executable "
+                "(0 builds); >1 means the engine builds eagerly twice"))
+    # the two protocol engines must not share an executable
+    _protocol_engine("naive")
+    n = builds(lambda: _protocol_engine("sharded"))
+    if n != 1:
+        found.append(Finding(
+            "REPRO-HLO-RECOMPILE", "src/repro/core/protocol.py", 0,
+            f"protocol engine flip naive->sharded produced {n} builds "
+            "(expected exactly 1)",
+            "ProtocolConfig.engine must stay in the _cache_key tuple"))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# REPRO-HLO-COLLECTIVES
+# ---------------------------------------------------------------------------
+
+
+def measure_exchange_bytes(engine: str):
+    """Ring-model bytes/device of the compiled exchange primitives vs the
+    ``collective_volume_bytes`` model: (measured, modeled, n_params).
+
+    Lowers ``masked_pull`` (the Median pull of the replica stacks) and
+    ``aggregate_gradients`` (the weighted push) on a rep-sharded ``[G, ...]``
+    parameter stack with replicated masks/weights — the exchange pattern of
+    one scatter step, minus the distance/Gram traffic that the model
+    deliberately excludes."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from ..core import protocol as _protocol
+    from ..exp import presets
+    from ..launch import hlo_analysis
+    from ..launch.mesh import make_protocol_mesh, use_mesh
+
+    e = presets.get(_PRESET, runner="protocol", protocol_engine=engine)
+    pcfg = e.to_protocol_config()
+    G = pcfg.n_groups
+    init_fn, _, _ = e.build_problem()
+    p0 = init_fn(jax.random.PRNGKey(0))
+    n_params = sum(l.size for l in jax.tree.leaves(p0))
+    mesh = make_protocol_mesh(G)
+    rep = NamedSharding(mesh, P("rep"))
+    repl = NamedSharding(mesh, P())
+    params = jax.tree.map(
+        lambda l: jax.device_put(jnp.broadcast_to(l, (G,) + l.shape), rep),
+        p0)
+    masks = jax.device_put(jnp.ones((G, G), bool), repl)
+    weights = jax.device_put(jnp.full((G, G), 1.0 / G, jnp.float32), repl)
+
+    with use_mesh(mesh):
+        pull = jax.jit(
+            lambda p, m: _protocol.masked_pull(p, m, pcfg, mesh=mesh))
+        push = jax.jit(
+            lambda g, w: _protocol.aggregate_gradients(g, w, pcfg, mesh=mesh))
+        texts = [pull.lower(params, masks).compile().as_text(),
+                 push.lower(params, weights).compile().as_text()]
+    measured = sum(
+        hlo_analysis.collective_traffic(t, G).bytes_per_device for t in texts)
+    return measured, _protocol.collective_volume_bytes(pcfg, n_params), \
+        n_params
+
+
+def check_collectives(root) -> list[Finding]:
+    found = _device_guard("REPRO-HLO-COLLECTIVES")
+    if found:
+        return found
+    for engine in ("naive", "sharded"):
+        measured, modeled, n_params = measure_exchange_bytes(engine)
+        if measured <= 0:
+            found.append(Finding(
+                "REPRO-HLO-COLLECTIVES", "src/repro/core/protocol.py", 0,
+                f"{engine}: no collectives found in the compiled exchange "
+                "primitives (mesh not applied?)",
+                "audit must run on a multi-device 'rep' mesh"))
+            continue
+        err = abs(measured - modeled) / modeled
+        if err > _COLLECTIVE_RTOL:
+            found.append(Finding(
+                "REPRO-HLO-COLLECTIVES", "src/repro/core/protocol.py", 0,
+                f"{engine}: modeled exchange {modeled}B vs HLO ring-model "
+                f"{measured:.0f}B ({err:.0%} off, P={n_params}, tol "
+                f"{_COLLECTIVE_RTOL:.0%})",
+                "re-derive collective_volume_bytes from the compiled "
+                "artifact, not from the intended sharding"))
+    return found
+
+
+for _rule in (
+    Rule("REPRO-HLO-COLLECTIVES", "hlo",
+         "`collective_volume_bytes` model within 10% of ring-model bytes "
+         "measured from compiled exchange-primitive HLO, both engines",
+         check_collectives,
+         "fix the model to match the artifact"),
+    Rule("REPRO-HLO-DONATION", "hlo",
+         "donated state survives to `input_output_alias` in every compiled "
+         "epoch/decode executable (fused, protocol x2, serve)",
+         check_donation,
+         "keep donated leaves shape/dtype-stable"),
+    Rule("REPRO-HLO-HOST-TRANSFER", "hlo",
+         "`run()` makes exactly one device->host transfer; epoch bodies "
+         "pass `transfer_guard_device_to_host('disallow')`",
+         check_host_transfers,
+         "keep metrics on device until the final concatenate"),
+    Rule("REPRO-HLO-RECOMPILE", "hlo",
+         "semantic compile cache dedupes identical engine configs and "
+         "splits every distinct knob (build-count sentinel)",
+         check_recompiles,
+         "keep _cache_key in lockstep with _build's closure"),
+):
+    register(_rule)

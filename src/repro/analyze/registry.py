@@ -1,0 +1,72 @@
+"""Pluggable rule registry for ``repro.analyze``.
+
+A :class:`Rule` couples an id with a checker:
+
+* ``scope="file"`` — ``check(tree, source, path) -> [Finding]`` runs once
+  per linted file with its parsed AST (layer 1; never imports the checked
+  code).
+* ``scope="repo"`` — ``check(root) -> [Finding]`` runs once against the
+  repo root (cross-file invariants: presets vs quorum bounds, registry vs
+  tests parity).
+* ``scope="hlo"`` — ``check(root) -> [Finding]`` runs only under
+  ``--hlo`` (layer 2; imports jax, lowers runners, audits compiled text).
+
+Rules register at import of :mod:`repro.analyze.rules`. The table printed
+by ``python -m repro.analyze --table`` (and embedded in the README) is
+derived from this registry, so it cannot go stale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+_RULES: dict[str, "Rule"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    scope: str                      # 'file' | 'repo' | 'hlo'
+    description: str                # one line, for the table
+    check: Callable
+    fix_hint: str = ""
+
+
+def register(rule: Rule) -> Rule:
+    if rule.scope not in ("file", "repo", "hlo"):
+        raise ValueError(f"bad scope {rule.scope!r} for {rule.rule_id}")
+    if rule.rule_id in _RULES:
+        raise ValueError(f"duplicate rule id {rule.rule_id}")
+    _RULES[rule.rule_id] = rule
+    return rule
+
+
+def get(rule_id: str) -> Rule:
+    _ensure_loaded()
+    return _RULES[rule_id]
+
+
+def rules(scope: str | None = None) -> list[Rule]:
+    _ensure_loaded()
+    out = sorted(_RULES.values(), key=lambda r: r.rule_id)
+    if scope is not None:
+        out = [r for r in out if r.scope == scope]
+    return out
+
+
+def _ensure_loaded() -> None:
+    # registration side effect. importlib, not `from . import rules`: the
+    # package re-exports the rules() *function*, which would shadow the
+    # subpackage in an attribute-style import and silently skip loading.
+    import importlib
+    importlib.import_module(".rules", __package__)
+
+
+def markdown_table() -> str:
+    """Rule table for --table / README (derived, never hand-maintained)."""
+    _ensure_loaded()
+    lines = ["| rule | layer | checks |", "|---|---|---|"]
+    layer = {"file": "1 (AST)", "repo": "1 (AST)", "hlo": "2 (HLO)"}
+    for r in rules():
+        lines.append(f"| `{r.rule_id}` | {layer[r.scope]} | {r.description} |")
+    return "\n".join(lines)

@@ -1,0 +1,10 @@
+"""Rule modules register themselves on import (see ``analyze.registry``).
+
+Layer-1 rules (AST, jax-free) import eagerly; the layer-2 HLO audit
+(``analyze.hlo``) registers its rule here too but defers every jax import
+to check time, so ``python -m repro.analyze`` stays fast and runnable
+before any accelerator runtime is up.
+"""
+from . import (cache_keys, env_hygiene, host_sync,  # noqa: F401
+               preconditions, registry_parity)
+from .. import hlo  # noqa: F401  (registers the REPRO-HLO-* rules)

@@ -1,0 +1,99 @@
+"""REPRO-CACHE-KEY: epoch compile-cache keys must cover what `_build` reads.
+
+The engines cache jitted epoch executables in a module-level semantic
+cache (``core/epochs.py``). An executable closes over everything its
+``_build()`` read off ``self`` — so every ``self.X`` reachable from
+``_build`` (transitively through same-class helper methods like
+``_flags``) must also be reachable from ``_cache_key``/``_instance_key``.
+A missed attribute means two engines that differ only in that attribute
+share one compiled epoch: silently wrong numerics, the worst failure mode
+a cache can have.
+
+Purely structural: no imports of the checked code. Classes are selected
+by base-class name (EpochRunner and its known subclasses), so third-party
+runners added later are picked up as long as they subclass the
+scaffolding.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astlint import self_attr_reads, self_method_calls
+from ..findings import Finding
+from ..registry import Rule, register
+
+_RUNNER_BASES = {"EpochRunner", "EpochEngine", "ProtocolEngine"}
+_BUILD = "_build"
+_KEYS = ("_cache_key", "_instance_key")
+# attrs that never leak into the executable: the cache slot itself, and
+# the per-call extras consumed outside the jitted epoch
+_EXEMPT = {"_epoch", "eval_set"}
+
+
+def _methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
+
+
+def _transitive_reads(cls_methods: dict, roots: list[str]) -> set[str]:
+    """self.X reads reachable from the named methods through same-class
+    self.m() calls."""
+    reads: set[str] = set()
+    seen: set[str] = set()
+    stack = [m for m in roots if m in cls_methods]
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        node = cls_methods[name]
+        reads |= self_attr_reads(node)
+        for callee in self_method_calls(node):
+            if callee in cls_methods:
+                stack.append(callee)
+    # called helper methods show up as attribute reads too; they're code,
+    # not config — drop them
+    return reads - set(seen) - set(cls_methods)
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    found: list[Finding] = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        base_names = {b.id if isinstance(b, ast.Name) else getattr(b, "attr", "")
+                      for b in cls.bases}
+        if not (base_names & _RUNNER_BASES):
+            continue
+        methods = _methods(cls)
+        if _BUILD not in methods:
+            continue
+        build_reads = _transitive_reads(methods, [_BUILD]) - _EXEMPT
+        if not any(k in methods for k in _KEYS):
+            found.append(Finding(
+                "REPRO-CACHE-KEY", path, cls.lineno,
+                f"runner `{cls.name}` defines `_build` but neither "
+                "`_cache_key` nor `_instance_key`",
+                "add a `_cache_key` covering every self attribute "
+                "`_build` closes over"))
+            continue
+        key_reads = _transitive_reads(methods, list(_KEYS)) - _EXEMPT
+        missing = sorted(build_reads - key_reads)
+        if missing:
+            found.append(Finding(
+                "REPRO-CACHE-KEY", path, methods[_BUILD].lineno,
+                f"`{cls.name}._build` closes over self.{{{', '.join(missing)}}}"
+                " not covered by `_cache_key`/`_instance_key` — engines "
+                "differing only in these share one compiled epoch",
+                "fold the attribute(s) into `_flags()`/`_cache_key()` "
+                "(use fn_cache_key/delivery_cache_key for callables)"))
+    return found
+
+
+register(Rule(
+    rule_id="REPRO-CACHE-KEY",
+    scope="file",
+    description="every `EpochRunner` subclass's cache key covers all "
+                "`self.*` config its `_build` closes over",
+    check=check,
+    fix_hint="extend `_flags()`/`_cache_key()`",
+))

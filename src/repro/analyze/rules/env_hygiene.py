@@ -1,0 +1,132 @@
+"""REPRO-ENV-IMPORT / REPRO-ENV-MUTATE: environment-flag hygiene.
+
+REPRO-ENV-IMPORT — a module-level ``os.environ.get("REPRO_*")`` /
+``os.getenv`` / ``os.environ[...]`` read freezes the flag at import time:
+later mutation (tests, ``Experiment.run`` overrides) silently does
+nothing, and any engine cache key derived from the frozen module global
+stops distinguishing runs. ``agg/rules.py`` carried a live instance of
+this until the PR that introduced this rule. Reads inside a function are
+fine — that IS the fix (resolve at call time).
+
+REPRO-ENV-MUTATE — a bare ``os.environ["REPRO_*"] = ...`` (or ``.pop`` /
+``del`` / ``.setdefault``/``.update``) outside the sanctioned override
+helpers leaks process-global state across runs on any exception path.
+Use ``repro.agg.dispatch.backend_override()`` / the flag's own
+contextmanager instead. ``agg/dispatch.py`` hosts the sanctioned
+helpers and is exempt.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astlint import call_name, literal_str
+from ..findings import Finding
+from ..registry import Rule, register
+
+_PREFIX = "REPRO_"
+# modules allowed to mutate REPRO_* env vars (the override helpers live
+# here; everything else must go through them)
+_MUTATE_EXEMPT = ("agg/dispatch.py",)
+
+
+def _env_key(node: ast.Call | ast.Subscript) -> str | None:
+    """Literal env-var name of an os.environ/os.getenv access, else None."""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in ("os.environ.get", "environ.get", "os.getenv", "getenv",
+                    "os.environ.setdefault", "environ.setdefault",
+                    "os.environ.pop", "environ.pop"):
+            if node.args:
+                return literal_str(node.args[0])
+    if isinstance(node, ast.Subscript):
+        base = ast.unparse(node.value)
+        if base in ("os.environ", "environ"):
+            return literal_str(node.slice)
+    return None
+
+
+def _module_level_nodes(tree: ast.Module):
+    """Statements executed at import time (incl. class bodies, excl. any
+    function body)."""
+    stack = list(tree.body)
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(stmt, ast.ClassDef):
+            stack.extend(stmt.body)
+            continue
+        yield stmt
+
+
+def check_import(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    found = []
+    for stmt in _module_level_nodes(tree):
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Lambda):
+                continue
+            if isinstance(node, (ast.Call, ast.Subscript)):
+                key = _env_key(node)
+                if key and key.startswith(_PREFIX):
+                    found.append(Finding(
+                        "REPRO-ENV-IMPORT", path, node.lineno,
+                        f"{key} read at import time (frozen before tests/"
+                        "overrides can set it; poisons compile-cache keys)",
+                        "resolve inside a function at call time, e.g. a "
+                        "`flag_enabled()` helper with an override hook"))
+    return found
+
+
+def check_mutate(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    norm = path.replace("\\", "/")
+    if any(norm.endswith(e) for e in _MUTATE_EXEMPT):
+        return []
+    found = []
+    for node in ast.walk(tree):
+        key = None
+        how = None
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Subscript):
+                    key = _env_key(t)
+                    how = "assignment to"
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    key = _env_key(t)
+                    how = "del of"
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in ("os.environ.pop", "environ.pop",
+                        "os.environ.setdefault", "environ.setdefault"):
+                if node.args:
+                    key = literal_str(node.args[0])
+                    how = f"{name.split('.')[-1]} on"
+        if key and key.startswith(_PREFIX):
+            found.append(Finding(
+                "REPRO-ENV-MUTATE", path, node.lineno,
+                f"bare {how} os.environ[{key!r}] (leaks global state on "
+                "exception paths)",
+                "use the exception-safe override contextmanager "
+                "(agg.dispatch.backend_override / use_sort_network)"))
+    return found
+
+
+register(Rule(
+    rule_id="REPRO-ENV-IMPORT",
+    scope="file",
+    description="no import-time reads of `REPRO_*` env flags",
+    check=check_import,
+    fix_hint="resolve the flag at call time",
+))
+
+register(Rule(
+    rule_id="REPRO-ENV-MUTATE",
+    scope="file",
+    description="no bare `os.environ[\"REPRO_*\"]` mutation outside the "
+                "sanctioned override helpers in `agg/dispatch.py`",
+    check=check_mutate,
+    fix_hint="wrap in an exception-safe contextmanager",
+))

@@ -145,11 +145,11 @@ class EpochEngine(EpochRunner):
         self._epoch = self._get_or_build()
 
     def _flags(self):
-        # _SORT_NETWORK and the process-default agg backend change the
-        # compiled trace of every order-statistic rule, so they must key the
-        # executable too (repro.exp.run toggles both per experiment)
+        # the sort-network setting and the process-default agg backend change
+        # the compiled trace of every order-statistic rule, so they must key
+        # the executable too (repro.exp.run toggles both per experiment)
         return (fn_cache_key(self.acc_fn), self.track_delta, self.track_gnorm,
-                self.metrics_every, _agg_rules._SORT_NETWORK,
+                self.metrics_every, _agg_rules.sort_network_enabled(),
                 _agg_dispatch.default_backend())
 
     def _cache_key(self):

@@ -73,9 +73,20 @@ def delivery_cache_key(delivery) -> tuple:
 _EPOCH_CACHE: dict[Any, Callable] = {}
 _EPOCH_CACHE_MAX = 64
 
+# Monotone count of cache MISSES (actual `_build` invocations = re-traces).
+# The compiled-artifact auditor (repro.analyze, REPRO-HLO-RECOMPILE) sweeps
+# semantically-identical and semantically-distinct engine configs against
+# this sentinel to prove the cache key is complete end-to-end: identical
+# configs must not increment it, distinct ones must.
+_BUILD_COUNT = 0
+
 
 def epoch_cache_size() -> int:
     return len(_EPOCH_CACHE)
+
+
+def epoch_build_count() -> int:
+    return _BUILD_COUNT
 
 
 def clear_epoch_cache() -> None:
@@ -122,6 +133,8 @@ class EpochRunner:
             key = self._instance_key()
         fn = _EPOCH_CACHE.get(key)
         if fn is None:
+            global _BUILD_COUNT
+            _BUILD_COUNT += 1
             fn = self._build()
             while len(_EPOCH_CACHE) >= _EPOCH_CACHE_MAX:
                 _EPOCH_CACHE.pop(next(iter(_EPOCH_CACHE)))

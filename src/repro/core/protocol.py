@@ -518,9 +518,11 @@ def aggregate_gradients(grads, weights, cfg: ProtocolConfig, mesh=None):
     """G_hat[s] = sum_w weights[s, w] * grads[w]  (leaf-wise, streamed).
 
     naive engine: materialise the all-gathered gradient stack per chunk
-    (the paper's broadcast-to-all message volume: replicate over 'rep' only,
-    body sharding preserved); sharded engine: leave the contraction to XLA
-    (reduces over 'rep' -> reduce-scatter-style, ~2P bytes)."""
+    (replicate over 'rep' only, body sharding preserved); sharded engine:
+    leave the contraction to XLA. Ring-model traffic is the same either way
+    — (G-1)·P per device, HLO-audited by ``repro.analyze`` — the engines
+    differ in whether the [G, ...] operand stack is materialised per device
+    (temp memory) before the dot."""
     dt = jnp.dtype(cfg.exchange_dtype)
 
     def agg_chunk(chunk):  # [G, ...]
@@ -841,7 +843,8 @@ class ProtocolEngine(EpochRunner):
     def _flags(self):
         return (fn_cache_key(self.acc_fn), self.track_delta,
                 self.metrics_every, self.with_attack,
-                _agg_rules._SORT_NETWORK, _agg_dispatch.default_backend())
+                _agg_rules.sort_network_enabled(),
+                _agg_dispatch.default_backend())
 
     def _cache_key(self):
         mesh_key = None if self.mesh is None else id(self.mesh)
@@ -908,13 +911,26 @@ class ProtocolEngine(EpochRunner):
 
 
 def collective_volume_bytes(pcfg: ProtocolConfig, n_params: int) -> int:
-    """Modeled per-step cross-'rep' collective exchange (bytes) of one scatter
-    step, per the engine contracts in the module docstring: the naive engine
-    all-gathers the G-replica gradient/model stacks (2·(G-1)·P payloads leave
-    each group), the sharded engine keeps aggregations as reductions over
-    'rep' (reduce-scatter/all-reduce, ~2·P)."""
+    """Modeled per-device cross-'rep' collective exchange (bytes) of one
+    scatter step's model/gradient payloads, HLO-verified by the compiled-
+    artifact auditor (``repro.analyze``, REPRO-HLO-COLLECTIVES):
+
+    * **pull** — the masked Median pull is an order statistic over the full
+      replica stack, so it all-gathers ``[G, P]``: ``(G-1)·P·itemsize`` per
+      device, for BOTH engines;
+    * **push** — the ``[G_recv, G_send] x [G_send, P]`` weighted aggregation
+      moves ``(G-1)·P·itemsize`` per device whichever way XLA lowers it
+      (all-gather the operand stack, or partial-dot + reduce-scatter of the
+      equally-sized ``[G, P]`` result — ring-model bytes are identical).
+
+    Earlier revisions modeled the sharded engine at ``~2·P`` (a reduce-
+    scatter of ONE replica's payload); auditing the compiled HLO showed
+    XLA lowers both engines to the same ``(G-1)·P`` exchanges at these
+    shapes — the engines differ in *temp memory* (the naive engine
+    materializes the replicated stack per device; see
+    ``aggregate_gradients``), not in ring-model traffic. The model covers
+    the exchange primitives (``masked_pull`` + ``aggregate_gradients``);
+    distance/Gram traffic for the selection weights rides on top."""
     itemsize = jnp.dtype(pcfg.exchange_dtype).itemsize
     G = pcfg.n_groups
-    if pcfg.engine == "naive":
-        return 2 * (G - 1) * n_params * itemsize
-    return 2 * n_params * itemsize
+    return 2 * (G - 1) * n_params * itemsize

@@ -147,10 +147,11 @@ def runners_table() -> str:
         ("protocol", "donated `lax.scan` epochs (`ProtocolEngine`)",
          "uniform or trace",
          "`[G, ...]` sharded over the ('rep','fsdp','model') mesh",
-         "naive 2(G−1)·P vs sharded ≈2·P"),
+         "2(G−1)·P either engine (HLO-audited; they differ in temp "
+         "memory, not ring traffic)"),
     ]
     out = ["| runner | loop | delivery | state layout | "
-           "per-step collective volume (naive vs sharded) |",
+           "per-step collective volume |",
            "|---|---|---|---|---|"]
     for name, loop, deliv, layout, vol in rows:
         out.append(f"| `{name}` | {loop} | {deliv} | {layout} | {vol} |")

@@ -38,6 +38,7 @@ import jax
 import numpy as np
 
 from ..agg import default_backend
+from ..agg.dispatch import backend_override
 from ..agg.rules import use_sort_network
 from ..core.engine import EpochEngine
 from ..core.simulator import coordinatewise_diameter_sum, l2_diameter
@@ -109,28 +110,18 @@ def run(experiment: Experiment | str, **overrides) -> RunResult:
         e = presets.get(experiment, **overrides)
     else:
         e = experiment.replace(**overrides) if overrides else experiment
-    prev_backend = os.environ.get("REPRO_AGG_BACKEND")
-    try:
-        if e.agg_backend is not None:
-            os.environ["REPRO_AGG_BACKEND"] = e.agg_backend
-        with use_sort_network(e.sort_network):
-            # delivery is orthogonal to the runner: a "trace" experiment can
-            # train stepwise or fused; runner="netsim" is fused + trace with
-            # the cluster accounting attached (delivery normalized at
-            # construction).
-            delivery, info = (_trace_delivery(e) if e.delivery == "trace"
-                              else (None, None))
-            if e.runner == "stepwise":
-                return _run_stepwise(e, delivery, info)
-            if e.runner == "protocol":
-                return _run_protocol(e, delivery, info)
-            return _run_fused(e, delivery, info)
-    finally:
-        if e.agg_backend is not None:
-            if prev_backend is None:
-                os.environ.pop("REPRO_AGG_BACKEND", None)
-            else:
-                os.environ["REPRO_AGG_BACKEND"] = prev_backend
+    with backend_override(e.agg_backend), use_sort_network(e.sort_network):
+        # delivery is orthogonal to the runner: a "trace" experiment can
+        # train stepwise or fused; runner="netsim" is fused + trace with
+        # the cluster accounting attached (delivery normalized at
+        # construction).
+        delivery, info = (_trace_delivery(e) if e.delivery == "trace"
+                          else (None, None))
+        if e.runner == "stepwise":
+            return _run_stepwise(e, delivery, info)
+        if e.runner == "protocol":
+            return _run_protocol(e, delivery, info)
+        return _run_fused(e, delivery, info)
 
 
 # ---------------------------------------------------------------------------

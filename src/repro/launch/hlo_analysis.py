@@ -120,3 +120,61 @@ def extrapolate(v1: float, v2: float, l1: int, l2: int, total: int) -> float:
     """Two-point linear depth extrapolation."""
     per_layer = (v2 - v1) / max(l2 - l1, 1)
     return v1 + per_layer * (total - l1)
+
+
+# ---------------------------------------------------------------------------
+# donation / buffer-alias auditing (repro.analyze layer 2)
+# ---------------------------------------------------------------------------
+
+# compiled.as_text() header entry:
+#   input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {}, must-alias) }
+# one `{output_index}: (param_number, param_index, kind)` entry per aliased
+# buffer. jax's donate_argnums lowers each donated pytree leaf to one entry
+# (CPU included — donation there is may-alias, but the alias table is still
+# emitted, which is what makes this statically checkable off-accelerator).
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{(?P<out>[0-9,\s]*)\}:\s*\(\s*(?P<param>\d+)\s*,\s*"
+    r"\{(?P<pidx>[0-9,\s]*)\}\s*,\s*(?P<kind>may-alias|must-alias)\s*\)")
+
+
+@dataclass(frozen=True)
+class AliasEntry:
+    output_index: tuple
+    param_number: int
+    param_index: tuple
+    kind: str
+
+
+def donation_aliases(hlo_text: str) -> list[AliasEntry]:
+    """Parse the ``input_output_alias`` table of compiled HLO text.
+
+    Returns one :class:`AliasEntry` per aliased (donated) buffer; an empty
+    list means XLA dropped every donation — the repo's donated-scan engines
+    treat that as a violation (REPRO-HLO-DONATION)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the table is brace-nested: scan to the balanced close
+    i = hlo_text.find("{", start)
+    depth, j = 0, i
+    while j < len(hlo_text):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    block = hlo_text[i:j + 1]
+    out = []
+    for m in _ALIAS_ENTRY_RE.finditer(block):
+        def _tup(s):
+            return tuple(int(p) for p in s.split(",") if p.strip())
+        out.append(AliasEntry(_tup(m.group("out")), int(m.group("param")),
+                              _tup(m.group("pidx")), m.group("kind")))
+    return out
+
+
+def aliased_param_numbers(hlo_text: str) -> set[int]:
+    """Parameter numbers covered by the input_output_alias table."""
+    return {e.param_number for e in donation_aliases(hlo_text)}

@@ -170,6 +170,14 @@ class QuorumService:
                 self.batcher.finish(r)
         return not self.batcher.idle
 
+    # -- compiled-artifact audit hook (repro.analyze layer 2) --------------
+    def lowered_decode(self):
+        """Lower one decode step over the pool's params/caches without
+        running it — the ``REPRO-HLO-DONATION`` audit checks the compiled
+        ``input_output_alias`` table covers the donated cache stack."""
+        toks = jnp.zeros((self.batcher.n_slots, 1, 1), jnp.int32)
+        return self._jdecode.lower(self.pool.params, self.caches, toks)
+
     def generate(self, prompts, max_new: int = 8,
                  deadline_ms: float | None = None) -> list[list[int]]:
         """Convenience driver: submit all prompts, run to idle, return each

@@ -1,0 +1,62 @@
+"""Subprocess body for the layer-2 compiled-artifact audit (needs 8 forced
+devices, which must be set before jax initialises — hence not in-process)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+
+from repro.analyze import hlo  # noqa: E402
+from repro.core import protocol  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) == 8
+
+    # collective bytes: HLO ring-model vs collective_volume_bytes, both
+    # engines, within the audit's 10% tolerance (measured: exact for the
+    # smoke preset's G=5 / P=1765 exchange)
+    for engine in ("naive", "sharded"):
+        measured, modeled, n_params = hlo.measure_exchange_bytes(engine)
+        assert n_params > 0 and modeled > 0
+        err = abs(measured - modeled) / modeled
+        print(f"{engine}: model={modeled}B hlo={measured:.0f}B "
+              f"err={err:.1%} P={n_params}")
+        assert err <= 0.10, (engine, measured, modeled)
+    assert hlo.check_collectives(".") == []
+
+    # donation: every donated state leaf must appear in input_output_alias
+    # of the compiled protocol epochs (spot-check the parser on the way)
+    for engine in ("naive", "sharded"):
+        _, _, mesh, eng, state, stream = hlo._protocol_engine(engine)
+        from repro.launch.mesh import use_mesh
+        with use_mesh(mesh):
+            txt = hlo._epoch_compiled_text(eng, state, stream)
+        n_state = len(jax.tree.leaves(state))
+        aliased = hlo_analysis.aliased_param_numbers(txt)
+        print(f"{engine}: {n_state} state leaves, aliased={sorted(aliased)}")
+        assert set(range(n_state)) <= aliased, (engine, n_state, aliased)
+    assert hlo.check_donation(".") == []
+
+    # host transfers + recompiles: the full audit rules run clean
+    assert hlo.check_host_transfers(".") == []
+    assert hlo.check_recompiles(".") == []
+
+    # the alias parser itself, against a fabricated table
+    entries = hlo_analysis.donation_aliases(
+        "HloModule m, input_output_alias={ {0}: (0, {}, may-alias), "
+        "{1}: (2, {0}, must-alias) }")
+    assert [(e.output_index, e.param_number, e.kind) for e in entries] == \
+        [((0,), 0, "may-alias"), ((1,), 2, "must-alias")]
+    assert hlo_analysis.aliased_param_numbers("no alias table here") == set()
+
+    # the model itself: engine-independent, HLO-verified form
+    pcfg = protocol.ProtocolConfig.derive(5, T=5, engine="naive")
+    assert protocol.collective_volume_bytes(pcfg, 1000) == 2 * 4 * 1000 * 4
+
+    print("ANALYZE_HLO_TESTS_PASS")
+
+
+if __name__ == "__main__":
+    main()

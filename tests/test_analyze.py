@@ -1,0 +1,322 @@
+"""repro.analyze layer 1: every AST rule on tripping AND clean fixtures,
+suppression/baseline mechanics, repo-scope invariants against the live
+tree, and the CLI wiring. The forced-8-device layer-2 audit runs in
+``test_analyze_distributed.py`` (subprocess lane)."""
+import ast
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analyze import (Finding, lint_file, lint_paths, lint_repo,
+                           load_baseline, markdown_table, rules,
+                           split_baselined, write_baseline)
+from repro.analyze.rules import preconditions, registry_parity
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def hits(source, rule_id=None, path="fixture.py"):
+    found = lint_file(path, ROOT, source=source)
+    if rule_id is None:
+        return found
+    return [f for f in found if f.rule_id == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# REPRO-HOST-SYNC
+# ---------------------------------------------------------------------------
+
+
+HOST_SYNC_TRIPPING = [
+    # jit-decorated step calling float() on a traced value
+    ("@jax.jit\ndef step(s, b):\n    return s, float(s.loss)\n", 3),
+    # .item() inside a lax.scan body (inner def passed by name)
+    ("def outer(xs):\n"
+     "    def body(c, x):\n"
+     "        return c, x.item()\n"
+     "    return jax.lax.scan(body, 0, xs)\n", 3),
+    # np.asarray in a lambda handed to lax.cond
+    ("def f(p, x):\n"
+     "    return jax.lax.cond(p, lambda v: np.asarray(v), lambda v: v, x)\n",
+     2),
+    # transitive: helper called by name from a jitted fn
+    ("def helper(x):\n"
+     "    return x.block_until_ready()\n"
+     "@jax.jit\n"
+     "def step(x):\n"
+     "    return helper(x)\n", 2),
+    # @partial(jax.jit, ...) spelling
+    ("@partial(jax.jit, static_argnums=0)\n"
+     "def step(n, x):\n"
+     "    return jax.device_get(x)\n", 3),
+]
+
+HOST_SYNC_CLEAN = [
+    # device code stays on device
+    ("@jax.jit\ndef step(s, b):\n    return s, jnp.mean(b)\n"),
+    # host-side float() outside any traced fn
+    ("def report(x):\n    return float(x)\n"),
+    # float of a literal inside jit is definition-time constant folding
+    ("@jax.jit\ndef step(x):\n    return x * float(1e-3)\n"),
+    # scan body that behaves
+    ("def outer(xs):\n"
+     "    def body(c, x):\n"
+     "        return c + jnp.sum(x), c\n"
+     "    return jax.lax.scan(body, 0.0, xs)\n"),
+    # .item() in a plain host helper never handed to a tracer
+    ("def summarize(arr):\n    return arr.sum().item()\n"),
+]
+
+
+@pytest.mark.parametrize("src,line", HOST_SYNC_TRIPPING)
+def test_host_sync_trips(src, line):
+    found = hits(src, "REPRO-HOST-SYNC")
+    assert found, src
+    assert found[0].line == line
+
+
+@pytest.mark.parametrize("src", HOST_SYNC_CLEAN)
+def test_host_sync_clean(src):
+    assert hits(src, "REPRO-HOST-SYNC") == []
+
+
+# ---------------------------------------------------------------------------
+# REPRO-ENV-IMPORT / REPRO-ENV-MUTATE
+# ---------------------------------------------------------------------------
+
+
+ENV_IMPORT_TRIPPING = [
+    'FLAG = os.environ.get("REPRO_SORT_NETWORK", "1") != "0"\n',
+    'BACKEND = os.getenv("REPRO_AGG_BACKEND", "auto")\n',
+    'X = os.environ["REPRO_THING"]\n',
+    # class body is still import time
+    'class C:\n    FLAG = os.environ.get("REPRO_F", "")\n',
+]
+
+ENV_IMPORT_CLEAN = [
+    # call-time read is the sanctioned pattern
+    'def enabled():\n    return os.environ.get("REPRO_SORT_NETWORK") != "0"\n',
+    # non-REPRO keys are out of scope
+    'DEBUG = os.environ.get("JAX_DEBUG", "")\n',
+]
+
+
+@pytest.mark.parametrize("src", ENV_IMPORT_TRIPPING)
+def test_env_import_trips(src):
+    assert hits(src, "REPRO-ENV-IMPORT"), src
+
+
+@pytest.mark.parametrize("src", ENV_IMPORT_CLEAN)
+def test_env_import_clean(src):
+    assert hits(src, "REPRO-ENV-IMPORT") == []
+
+
+def test_env_mutate_trips_everywhere_but_dispatch():
+    src = 'def f():\n    os.environ["REPRO_AGG_BACKEND"] = "jnp"\n'
+    assert hits(src, "REPRO-ENV-MUTATE")
+    # pop / setdefault count as mutations too
+    assert hits('def f():\n    os.environ.pop("REPRO_X", None)\n',
+                "REPRO-ENV-MUTATE")
+    # the blessed owner of the env dance is exempt
+    assert hits(src, "REPRO-ENV-MUTATE",
+                path=os.path.join("src", "repro", "agg", "dispatch.py")) == []
+
+
+def test_env_mutate_clean_on_reads():
+    assert hits('def f():\n    return os.environ.get("REPRO_X")\n',
+                "REPRO-ENV-MUTATE") == []
+
+
+# ---------------------------------------------------------------------------
+# REPRO-CACHE-KEY
+# ---------------------------------------------------------------------------
+
+
+CACHE_KEY_TRIPPING = """
+class Eng(EpochRunner):
+    def _build(self):
+        flag = self.track_delta
+        return lambda s, b: (s, flag)
+    def _cache_key(self):
+        return ("eng", self.cfg)
+"""
+
+CACHE_KEY_CLEAN = """
+class Eng(EpochRunner):
+    def _build(self):
+        flag = self.track_delta
+        return lambda s, b: (s, flag)
+    def _cache_key(self):
+        return ("eng", self.cfg, self.track_delta)
+"""
+
+CACHE_KEY_TRANSITIVE = """
+class Eng(EpochRunner):
+    def _make_step(self):
+        return lambda s: s * self.lr_scale
+    def _build(self):
+        step = self._make_step()
+        return lambda s, b: (step(s), None)
+    def _cache_key(self):
+        return ("eng", self.cfg)
+"""
+
+
+def test_cache_key_trips_on_uncovered_attr():
+    found = hits(CACHE_KEY_TRIPPING, "REPRO-CACHE-KEY")
+    assert found and "track_delta" in found[0].message
+
+
+def test_cache_key_clean_when_covered():
+    assert hits(CACHE_KEY_CLEAN, "REPRO-CACHE-KEY") == []
+
+
+def test_cache_key_walks_helper_methods():
+    found = hits(CACHE_KEY_TRANSITIVE, "REPRO-CACHE-KEY")
+    assert found and "lr_scale" in found[0].message
+
+
+def test_cache_key_requires_key_method():
+    src = ("class Eng(EpochRunner):\n"
+           "    def _build(self):\n"
+           "        return lambda s, b: (s, None)\n")
+    assert hits(src, "REPRO-CACHE-KEY")
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_inline_suppression_with_justification():
+    src = ('X = os.environ.get("REPRO_X")  '
+           "# analyze: ignore[REPRO-ENV-IMPORT] fixture for the docs\n")
+    assert hits(src, "REPRO-ENV-IMPORT") == []
+
+
+def test_bare_suppression_is_itself_a_violation():
+    # no justification: the marker is flagged AND buys no suppression
+    src = ('X = os.environ.get("REPRO_X")  '
+           "# analyze: ignore[REPRO-ENV-IMPORT]\n")
+    found = sorted(f.rule_id for f in hits(src))
+    assert found == ["REPRO-ENV-IMPORT", "REPRO-SUPPRESS"]
+
+
+def test_suppression_on_previous_line_applies():
+    src = ("# analyze: ignore[REPRO-ENV-IMPORT] fixture\n"
+           'X = os.environ.get("REPRO_X")\n')
+    assert hits(src, "REPRO-ENV-IMPORT") == []
+
+
+def test_marker_inside_string_does_not_suppress():
+    src = ('MSG = "analyze: ignore[REPRO-ENV-IMPORT] nope"\n'
+           'X = os.environ.get("REPRO_X")\n')
+    assert hits(src, "REPRO-ENV-IMPORT")
+
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding("REPRO-ENV-IMPORT", "a.py", 3, "import-time read")
+    f2 = Finding("REPRO-HOST-SYNC", "b.py", 9, "float() in scan")
+    path = str(tmp_path / "baseline.json")
+    write_baseline([f1], path)
+    base = load_baseline(path)
+    new, known = split_baselined([f1, f2], base)
+    assert [f.rule_id for f in new] == ["REPRO-HOST-SYNC"]
+    assert [f.rule_id for f in known] == ["REPRO-ENV-IMPORT"]
+    # baseline keys survive line-number churn
+    assert Finding("REPRO-ENV-IMPORT", "a.py", 99,
+                   "import-time read").key in base
+
+
+def test_syntax_error_reported_not_raised():
+    found = hits("def broken(:\n")
+    assert [f.rule_id for f in found] == ["REPRO-PARSE"]
+
+
+# ---------------------------------------------------------------------------
+# repo-scope rules against the live tree
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    assert lint_repo(ROOT) == []
+
+
+def test_byz_bounds_sees_all_presets():
+    with open(os.path.join(ROOT, "src", "repro", "exp", "presets.py")) as f:
+        tree = ast.parse(f.read())
+    assert len(list(preconditions._preset_calls(tree))) >= 10
+    assert preconditions.check(ROOT) == []
+
+
+def test_byz_bounds_math_trips_on_bad_clusters():
+    bad = dict(n_workers=3, f_workers=1, n_servers=5, f_servers=1,
+               variant="async", q_workers=None, q_servers=None)
+    assert any("3f_w+1" in p for p in preconditions._bounds_violations(bad))
+    bad_srv = dict(bad, n_workers=9, n_servers=4)
+    assert any("3f_ps+2" in p
+               for p in preconditions._bounds_violations(bad_srv))
+    ok = dict(bad, n_workers=9)
+    assert preconditions._bounds_violations(ok) == []
+
+
+def test_agg_parity_clean_on_live_registry():
+    assert registry_parity.check(ROOT) == []
+
+
+# ---------------------------------------------------------------------------
+# registry + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_rule_registry_covers_both_layers():
+    ids = {r.rule_id for r in rules()}
+    assert {"REPRO-HOST-SYNC", "REPRO-ENV-IMPORT", "REPRO-ENV-MUTATE",
+            "REPRO-CACHE-KEY", "REPRO-BYZ-BOUNDS", "REPRO-AGG-PARITY",
+            "REPRO-HLO-DONATION", "REPRO-HLO-HOST-TRANSFER",
+            "REPRO-HLO-RECOMPILE", "REPRO-HLO-COLLECTIVES"} <= ids
+    table = markdown_table()
+    for rid in ids:
+        assert rid in table
+
+
+def test_lint_paths_skip_tests_and_results():
+    paths = lint_paths(ROOT)
+    assert paths, "lint roots found no files"
+    assert not any(os.sep + "tests" + os.sep in p for p in paths)
+    assert not any("__pycache__" in p for p in paths)
+    assert any(p.endswith(os.path.join("analyze", "astlint.py"))
+               for p in paths)
+
+
+def test_cli_layer1_exits_zero(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    report = str(tmp_path / "report.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analyze", "--json", report],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "clean" in out.stdout
+    with open(report) as f:
+        doc = json.load(f)
+    assert doc["clean"] and doc["violations"] == []
+    assert "REPRO-HOST-SYNC" in doc["stats"]["rules_run"]
+
+
+def test_cli_table(capsys):
+    from repro.analyze.__main__ import main
+    assert main(["--table"]) == 0
+    out = capsys.readouterr().out
+    assert "REPRO-HLO-COLLECTIVES" in out and "| rule |" in out
+
+
+def test_committed_baseline_is_empty():
+    path = os.path.join(ROOT, "results", "analyze", "baseline.json")
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["findings"] == []

@@ -1,0 +1,21 @@
+"""Layer-2 compiled-artifact audit on 8 forced host devices (subprocess —
+the device count must be set before jax initialises)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_hlo_audit_end_to_end():
+    runner = os.path.join(os.path.dirname(__file__), "_analyze_runner.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)          # the runner sets its own
+    out = subprocess.run([sys.executable, runner], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ANALYZE_HLO_TESTS_PASS" in out.stdout, out.stdout

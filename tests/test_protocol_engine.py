@@ -198,11 +198,13 @@ class TestEngineMechanics:
                                     inverse_linear(0.05, 0.01), acc_fn=acc)
 
     def test_collective_volume_model(self):
+        # both engines lower to (G-1)·P pull + (G-1)·P push exchanges —
+        # HLO-verified by repro.analyze (REPRO-HLO-COLLECTIVES); the old
+        # "sharded ≈ 2·P" model was 4x off what XLA actually compiles
         sharded = make_pcfg(make_cfg(), "sharded")
         naive = make_pcfg(make_cfg(), "naive")
         P = 10_000
         assert protocol.collective_volume_bytes(naive, P) == \
             2 * (G - 1) * P * 4
-        assert protocol.collective_volume_bytes(sharded, P) == 2 * P * 4
-        assert protocol.collective_volume_bytes(naive, P) > \
-            protocol.collective_volume_bytes(sharded, P)
+        assert protocol.collective_volume_bytes(sharded, P) == \
+            protocol.collective_volume_bytes(naive, P)
