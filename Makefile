@@ -2,7 +2,7 @@
 PY      := python
 ENV     := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: all tier1 test fast lint lint-fast netsim agg-bench bench examples perf exp serve serve-bench
+.PHONY: all tier1 test fast lint lint-fast netsim agg-bench bench examples perf exp serve serve-bench elastic-bench
 
 # default: static analysis first (seconds to fail on a repo-invariant
 # violation), then the full tier-1 gate
@@ -54,6 +54,11 @@ serve:
 
 serve-bench:
 	$(ENV) $(PY) -m benchmarks.run --only serve
+
+# elastic membership: protocol-vs-elastic equivalence (bit-identity asserted),
+# churn overhead, and recovery-time-to-parity after a G 5->4->5 cycle
+elastic-bench:
+	$(ENV) $(PY) -m benchmarks.run --only elastic
 
 # experiment-API smoke lane: one spec through all four runners (stepwise
 # oracle, fused engine, netsim trace, distributed protocol on a 1-device

@@ -1,0 +1,126 @@
+"""Elastic-membership lane: churn overhead + recovery-time-to-parity.
+
+Three measurements, one JSON (``results/benchmarks/elastic.json``):
+
+  1. **equivalence** — the same spec through ``runner="protocol"`` and an
+     empty-plan ``runner="elastic"`` must land bit-identical final params
+     (asserted, not just recorded); steps/s of both quantifies the price
+     of the membership machinery (epoch chunking + boundary checks) when
+     nothing churns;
+  2. **planned churn** — ``elastic/planned_churn`` (G 5 -> 4 -> 8 steps
+     -> 5, the rejoiner re-seeded from the DMC median of the survivors)
+     vs the static oracle: per-step accuracy curves plus
+     *recovery-time-to-parity* — how many post-rejoin steps until the
+     churned run is back within tolerance of the static run at the same
+     step;
+  3. **netsim churn** — the same measurement with the plan lowered from
+     the realized ``membership_churn`` crash trace instead of authored.
+
+Each RunResult also lands in the spec-hash-keyed store
+(``benchmarks/store.py``), so churn-run metric drift across revisions is
+diffed like any other sweep point. Run via ``python -m benchmarks.run
+--only elastic`` or ``make elastic-bench``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.exp as exp
+from benchmarks import store
+
+#: parity = within this absolute accuracy of the static oracle's same step
+PARITY_TOL = 0.02
+
+
+def _steps_per_s(res) -> float:
+    return res.experiment.steps / max(res.wall_s, 1e-9)
+
+
+def _recovery_to_parity(churned, static, rejoin_step: int) -> int | None:
+    """Steps after ``rejoin_step`` until the churned run's accuracy is
+    within ``PARITY_TOL`` of the static run's at the same step (None =
+    never inside the run)."""
+    ca = np.asarray(churned.buffers["acc"], np.float64)
+    sa = np.asarray(static.buffers["acc"], np.float64)
+    for j in range(rejoin_step, min(len(ca), len(sa))):
+        if ca[j] >= sa[j] - PARITY_TOL:
+            return j - rejoin_step
+    return None
+
+
+def _churn_entry(res, static) -> dict:
+    mem = res.provenance["membership"]
+    joins = [e["step"] for e in mem["events"] if e["kind"] == "join"]
+    rejoin = max(joins) if joins else res.experiment.steps
+    return {
+        "plan_source": mem["plan_source"],
+        "events": mem["events"],
+        "epochs": mem["epochs"],
+        "steps_per_s": _steps_per_s(res),
+        "final_acc": res.final["acc"],
+        "acc_at_rejoin": float(np.asarray(res.buffers["acc"])[rejoin - 1]),
+        "recovery_steps_to_parity": _recovery_to_parity(res, static, rejoin),
+    }
+
+
+def run(quick: bool = True):
+    overrides = {} if quick else {"steps": 48, "metrics_every": 8}
+    results = {"quick": quick, "parity_tol": PARITY_TOL}
+
+    # 1. equivalence: protocol vs empty-plan elastic, bit for bit
+    static_proto = exp.run("elastic/static", runner="protocol", **overrides)
+    static = exp.run("elastic/static", **overrides)
+    pp = jax.tree.leaves(static_proto.state.params)
+    pe = jax.tree.leaves(static.state.params)
+    identical = all(np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(pp, pe))
+    assert identical, "empty-plan elastic diverged from runner=protocol"
+    results["equivalence"] = {
+        "bit_identical": identical,
+        "protocol_steps_per_s": _steps_per_s(static_proto),
+        "elastic_steps_per_s": _steps_per_s(static),
+        "overhead_x": (_steps_per_s(static_proto)
+                       / max(_steps_per_s(static), 1e-9)),
+        "final_acc": static.final["acc"],
+    }
+
+    # 2. authored churn vs the static oracle
+    churned = exp.run("elastic/planned_churn", **overrides)
+    results["planned_churn"] = _churn_entry(churned, static)
+
+    # 3. the same, with the plan lowered from the realized netsim trace
+    netsim = exp.run("elastic/netsim_churn", **overrides)
+    results["netsim_churn"] = _churn_entry(netsim, static)
+
+    for res in (static_proto, static, churned, netsim):
+        store.store(res.to_dict())
+    results["provenance"] = exp.provenance()
+    return results
+
+
+def summarize(res: dict) -> str:
+    eq = res["equivalence"]
+    lines = [
+        f"[elastic] empty plan vs protocol: bit-identical={eq['bit_identical']}"
+        f", {eq['protocol_steps_per_s']:.1f} vs {eq['elastic_steps_per_s']:.1f}"
+        f" steps/s (overhead {eq['overhead_x']:.2f}x)",
+    ]
+    for lane in ("planned_churn", "netsim_churn"):
+        e = res[lane]
+        rec = e["recovery_steps_to_parity"]
+        rec = "never" if rec is None else f"{rec} steps"
+        lines.append(
+            f"  {lane:13s} [{e['plan_source']}]: G trajectory "
+            f"{'->'.join(str(len(ep['active'])) for ep in e['epochs'])}, "
+            f"final acc {e['final_acc']:.3f} "
+            f"(static {res['equivalence']['final_acc']:.3f}), "
+            f"parity {rec} after rejoin, {e['steps_per_s']:.1f} steps/s")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import json
+    r = run(quick=True)
+    print(summarize(r))
+    print(json.dumps(r, indent=1, default=float)[:2000])

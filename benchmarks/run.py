@@ -37,6 +37,7 @@ EXPERIMENTS = [
     ("agg", "exp_agg_backends"),
     ("throughput", "exp_throughput"),
     ("serve", "exp_serve"),
+    ("elastic", "exp_elastic"),
     ("analyze", "exp_analyze"),
 ]
 

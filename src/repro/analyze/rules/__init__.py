@@ -6,5 +6,5 @@ to check time, so ``python -m repro.analyze`` stays fast and runnable
 before any accelerator runtime is up.
 """
 from . import (cache_keys, env_hygiene, host_sync,  # noqa: F401
-               preconditions, registry_parity)
+               membership_floor, preconditions, registry_parity)
 from .. import hlo  # noqa: F401  (registers the REPRO-HLO-* rules)

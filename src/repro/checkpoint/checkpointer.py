@@ -60,14 +60,21 @@ def _gc_orphan_tmp(ckpt_dir: str) -> None:
                 shutil.rmtree(path, ignore_errors=True)
 
 
-def save(ckpt_dir: str, step: int, state_tree) -> str:
-    """Atomically save a pytree checkpoint. Returns the final directory."""
+def save(ckpt_dir: str, step: int, state_tree, *,
+         meta: dict | None = None) -> str:
+    """Atomically save a pytree checkpoint. Returns the final directory.
+
+    ``meta`` is an optional JSON-compatible dict stored verbatim in the
+    manifest (the elastic runner records the active-group set there so a
+    resume re-forms the right fleet)."""
     final = step_dir(ckpt_dir, step)
     tmp = final + ".tmp"
     os.makedirs(ckpt_dir, exist_ok=True)
     _gc_orphan_tmp(ckpt_dir)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
+    if meta is not None:
+        manifest["meta"] = meta
     for name, leaf in _leaf_paths(state_tree):
         arr = np.asarray(jax.device_get(leaf))
         fname = name.replace("/", "__") + ".npy"
@@ -95,6 +102,13 @@ def latest_step(ckpt_dir: str) -> int | None:
             continue
         steps.append(step)
     return max(steps) if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The manifest dict of one checkpoint step (leaf shapes/dtypes + any
+    ``meta`` the saver attached) — no array data is touched."""
+    with open(os.path.join(step_dir(ckpt_dir, step), "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):

@@ -93,6 +93,17 @@ def sample_classification_epoch(key: jax.Array, centres: jax.Array,
     return key, (x, y)
 
 
+@partial(jax.jit, static_argnames=("length",))
+def _advance_key(key: jax.Array, length: int) -> jax.Array:
+    """The carried key after ``length`` stream steps (one split per step —
+    the same walk as :func:`sample_classification_epoch`, batches discarded)."""
+    def split_one(k, _):
+        return jax.random.split(k)[0], None
+
+    key, _ = lax.scan(split_one, key, None, length=length)
+    return key
+
+
 class DeviceBatchStream:
     """Device-resident data stream for the fused epoch engine.
 
@@ -114,12 +125,26 @@ class DeviceBatchStream:
         self.centres = make_mixture(spec, kc)
         self._key = key
 
-    def next(self, length: int):
-        """Next ``length`` batches: ``(x [L, n_w, b, dim], y [L, n_w, b])``."""
+    def next(self, length: int, n_workers: int | None = None):
+        """Next ``length`` batches: ``(x [L, n_w, b, dim], y [L, n_w, b])``.
+
+        ``n_workers`` overrides the stream width for this call (the elastic
+        runner draws narrower batches while the fleet is shrunk). The carried
+        key chain advances one split per *step* regardless of width, so a
+        width change never desynchronizes the stream from a full-width run —
+        the basis of the elastic runner's resume/bit-identity guarantees."""
+        nw = self.n_workers if n_workers is None else n_workers
         self._key, batches = sample_classification_epoch(
-            self._key, self.centres, self.spec, self.n_workers,
+            self._key, self.centres, self.spec, nw,
             self.batch_per_worker, length)
         return batches
+
+    def skip(self, length: int):
+        """Advance the key chain ``length`` steps without sampling — exactly
+        the splits ``next`` would have consumed (checkpointed-resume
+        fast-forward)."""
+        if length:
+            self._key = _advance_key(self._key, length)
 
     def eval_set(self, n: int = 2048, eval_seed: int = 10_007):
         """Held-out eval set, identical to ``classification_stream``'s."""

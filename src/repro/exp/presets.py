@@ -14,6 +14,7 @@ the README.
 from __future__ import annotations
 
 from ..core.attacks import ByzantineSpec
+from ..core.membership import MembershipEvent, MembershipPlan
 from .spec import Experiment
 
 _PRESETS: dict[str, Experiment] = {}
@@ -97,7 +98,7 @@ _NETSIM_COMMON = dict(
     runner="netsim", T=5, steps=30, batch=16, model="mlp_h32",
     data="mixture5_small", metrics_every=10, eval_n=512)
 for _scen in ("baseline_uniform", "heavy_tail_stragglers", "partitioned_dmc",
-              "crash_storm"):
+              "crash_storm", "membership_churn"):
     register(Experiment(name=f"netsim/{_scen}", scenario=_scen,
                         **_NETSIM_COMMON))
 # the compound adversary: netsim makes the Byzantine workers slow, the
@@ -122,6 +123,32 @@ register(Experiment(
     name="serve/ckpt_lie_server",
     byz=ByzantineSpec(server_attack="lie", n_byz_servers=1, equivocate=True),
     **_SERVE_COMMON))
+
+
+# elastic presets: join/leave-tolerant protocol training (core/membership).
+# G=5 launches at the declared Table-1 point (f_w=f_ps=1); while a group is
+# down (G'=4) the churn-driven resilience caps f_ps' at 0, so these presets
+# stay honest (no Byzantine servers) — a Byz-server spec with a shrink event
+# is rejected at construction (MembershipFloorError).
+_ELASTIC_COMMON = dict(
+    runner="elastic", n_workers=5, f_workers=1, n_servers=5, f_servers=1,
+    T=5, steps=24, batch=8, model="mlp_h32", data="mixture5_small",
+    metrics_every=4, eval_n=256)
+# static fleet: bit-identical to runner="protocol" on the same spec (the
+# elastic equivalence gate, tests/test_membership.py)
+register(Experiment(name="elastic/static", **_ELASTIC_COMMON))
+# authored plan: group 4 leaves at step 8 (G 5->4) and rejoins at step 16,
+# re-seeded from the DMC median of the survivors
+register(Experiment(
+    name="elastic/planned_churn",
+    membership_plan=MembershipPlan(events=(
+        MembershipEvent(step=8, kind="leave", group=4),
+        MembershipEvent(step=16, kind="join", group=4))),
+    **_ELASTIC_COMMON))
+# scenario-driven plan: the membership_churn crash windows realize through
+# the netsim engine and lower to leave/join events (plan_from_trace)
+register(Experiment(name="elastic/netsim_churn", scenario="membership_churn",
+                    **_ELASTIC_COMMON))
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +176,11 @@ def runners_table() -> str:
          "`[G, ...]` sharded over the ('rep','fsdp','model') mesh",
          "2(G−1)·P either engine (HLO-audited; they differ in temp "
          "memory, not ring traffic)"),
+        ("elastic", "protocol epochs chunked at membership boundaries "
+         "(`core/membership.py`): mesh/quorums re-formed per epoch, "
+         "checkpointed resume, DMC-seeded re-admission", "uniform",
+         "`[G', ...]` re-stacked per membership epoch", "as protocol, "
+         "per-epoch G′"),
     ]
     out = ["| runner | loop | delivery | state layout | "
            "per-step collective volume |",

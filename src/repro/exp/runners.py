@@ -121,6 +121,8 @@ def run(experiment: Experiment | str, **overrides) -> RunResult:
             return _run_stepwise(e, delivery, info)
         if e.runner == "protocol":
             return _run_protocol(e, delivery, info)
+        if e.runner == "elastic":
+            return _run_elastic(e)
         return _run_fused(e, delivery, info)
 
 
@@ -219,14 +221,30 @@ def _run_fused(e: Experiment, delivery=None, netsim=None) -> RunResult:
                      netsim=netsim, state=state, buffers=mbuf)
 
 
+# (G, device_count) -> protocol mesh. Reusing the SAME Mesh object across
+# runs (and across the elastic runner's membership epochs with equal G) keeps
+# the engines' semantic compile cache hot: the epoch cache keys the mesh by
+# identity, so a fresh Mesh per run would force a re-trace every time.
+_MESH_CACHE: dict[tuple, Any] = {}
+
+
+def _protocol_mesh(G: int):
+    key = (G, jax.device_count())
+    mesh = _MESH_CACHE.get(key)
+    if mesh is None:
+        from ..launch.mesh import make_protocol_mesh
+        mesh = _MESH_CACHE[key] = make_protocol_mesh(G)
+    return mesh
+
+
 def _run_protocol(e: Experiment, delivery=None, netsim=None) -> RunResult:
     from ..core import protocol as _protocol
-    from ..launch.mesh import make_protocol_mesh, use_mesh
+    from ..launch.mesh import use_mesh
     pcfg = e.to_protocol_config()
     G = pcfg.n_groups
     init_fn, loss_fn, acc = e.build_problem()
     bundle = _protocol.ProblemBundle(init=init_fn, loss=loss_fn)
-    mesh = make_protocol_mesh(G)
+    mesh = _protocol_mesh(G)
     stream = DeviceBatchStream(e.seed, e.mixture, G, e.batch)
     ex, ey = stream.eval_set(e.eval_n)
     with_attack = bool(e.byz.worker_attack or e.byz.server_attack)
@@ -277,6 +295,196 @@ def _run_protocol(e: Experiment, delivery=None, netsim=None) -> RunResult:
     prov["mesh"] = dict(zip(mesh.axis_names,
                             (int(n) for n in mesh.devices.shape)))
     prov["protocol_engine"] = pcfg.engine
+    return RunResult(e, logs, final, wall, prov, netsim=netsim, state=state,
+                     buffers=mbuf)
+
+
+class _GroupView:
+    """Width-adapted view of a :class:`DeviceBatchStream`: draws batches for
+    the epoch's active-group count while advancing the base stream's key chain
+    one split per step — exactly as the full-width stream would — so the data
+    sequence stays aligned with the global step counter across membership
+    changes."""
+
+    def __init__(self, base: DeviceBatchStream, n_groups: int):
+        self.base = base
+        self.n_groups = n_groups
+
+    def next(self, length: int):
+        return self.base.next(length, n_workers=self.n_groups)
+
+
+def _run_elastic(e: Experiment) -> RunResult:
+    """Join/leave-tolerant protocol training (``runner="elastic"``).
+
+    The run is chunked at every membership boundary of the plan (authored in
+    the spec, or lowered from the named netsim scenario's realized crash
+    windows). At each boundary the replica-stacked ``ByzState`` is
+    checkpointed (when a ckpt_dir is given), the mesh and resilience
+    parameters are re-formed for the new fleet
+    (:func:`repro.core.membership.epoch_config` — Table-1 re-validated, hard
+    :class:`~repro.core.membership.MembershipFloorError` below the floor),
+    and re-admitted groups are seeded from the DMC median of the survivors.
+    With an empty plan the run is bit-identical to ``runner="protocol"``."""
+    import dataclasses as _dc
+
+    from ..checkpoint import checkpointer as ck
+    from ..core import membership as _membership
+    from ..core import protocol as _protocol
+    from ..launch.mesh import use_mesh
+
+    pcfg0 = e.to_protocol_config()
+    G0 = pcfg0.n_groups
+    sync = e.variant == "sync"
+
+    plan, plan_source, netsim = e.membership_plan, "spec", None
+    if plan is None and e.scenario is not None:
+        from ..netsim import ClusterSim
+        sc = e.to_scenario()
+        trace = ClusterSim(sc).run()
+        plan = _membership.plan_from_trace(sc, trace)
+        plan_source = f"scenario:{e.scenario}"
+        netsim = {"scenario": sc.name, "steps": int(sc.steps),
+                  "virtual_ms": float(trace.step_done_ms[-1]),
+                  "events": int(trace.events),
+                  "shortfalls": int(trace.shortfalls)}
+    if plan is None:
+        plan = _membership.MembershipPlan()
+    if not plan.events:
+        plan_source = "static" if plan_source == "spec" else plan_source
+    segs = plan.epochs(G0, e.steps)
+
+    init_fn, loss_fn, acc = e.build_problem()
+    bundle = _protocol.ProblemBundle(init=init_fn, loss=loss_fn)
+    stream = DeviceBatchStream(e.seed, e.mixture, G0, e.batch)
+    ex, ey = stream.eval_set(e.eval_n)
+    with_attack = bool(e.byz.worker_attack or e.byz.server_attack)
+
+    if e.ckpt_every and not e.ckpt_dir:
+        raise ValueError(
+            f"experiment {e.name!r} sets ckpt_every={e.ckpt_every} "
+            "but no ckpt_dir; pass one at run time, e.g. "
+            'exp.run(name, ckpt_dir="...")')
+
+    # resume: the latest checkpoint's manifest meta names the active set it
+    # was saved under (absent for runner="protocol" checkpoints -> launch G)
+    start, resume_active = 0, None
+    if e.ckpt_dir:
+        latest = ck.latest_step(e.ckpt_dir)
+        if latest is not None:
+            start = int(latest)
+            if start > e.steps:
+                raise ValueError(
+                    f"checkpoint at step {start} under {e.ckpt_dir!r} is "
+                    f"beyond this run (steps={e.steps}); wrong ckpt_dir?")
+            meta = ck.read_manifest(e.ckpt_dir, start).get("meta") or {}
+            resume_active = tuple(int(g) for g in
+                                  meta.get("active", range(G0)))
+
+    def _save(step: int, state, active) -> None:
+        ck.save(e.ckpt_dir, step, state,
+                meta={"elastic": True, "active": [int(g) for g in active],
+                      "n_groups_launch": G0, "spec_hash": e.spec_hash})
+
+    def _shardings(pcfg, mesh):
+        return _protocol.state_shardings(
+            jax.eval_shape(_protocol.make_init_fn(bundle, pcfg),
+                           jax.random.PRNGKey(0)),
+            mesh, overrides=_protocol.attn_overrides(bundle.cfg, mesh))
+
+    state, prev_active, bufs = None, None, []
+    pcfg = pcfg0
+    mesh = _protocol_mesh(G0)
+    t0 = time.time()
+    for seg in segs:
+        if seg.stop <= start and seg.stop < e.steps:
+            continue  # fully replayed by the checkpoint (keep the last seg)
+        pcfg = _membership.epoch_config(pcfg0, seg.active, synchronous=sync)
+        mesh = _protocol_mesh(pcfg.n_groups)
+        with use_mesh(mesh):
+            eng = _protocol.ProtocolEngine(
+                bundle, pcfg, e.build_schedule(), mesh=mesh,
+                with_attack=with_attack, acc_fn=acc, eval_set=(ex, ey),
+                track_delta=e.track_delta, metrics_every=e.metrics_every)
+            if state is None:
+                if start > 0:
+                    if resume_active != seg.active:
+                        raise ValueError(
+                            f"checkpoint at step {start} was saved with "
+                            f"active groups {resume_active}, but this plan's "
+                            f"epoch there has {seg.active} — the checkpoint "
+                            "does not belong to this membership plan")
+                    like = jax.eval_shape(
+                        _protocol.make_init_fn(bundle, pcfg),
+                        jax.random.PRNGKey(0))
+                    state, _ = ck.restore(e.ckpt_dir, start, like,
+                                          _shardings(pcfg, mesh))
+                    stream.skip(start)
+                else:
+                    state = eng.init_state(jax.random.PRNGKey(e.seed))
+            elif prev_active != seg.active:
+                params = _membership.reform_params(state.params, prev_active,
+                                                   seg.active)
+                state = _protocol.ByzState(params=params, t=state.t,
+                                           key=state.key)
+                state = jax.tree.map(jax.device_put, state,
+                                     _shardings(pcfg, mesh))
+                if e.ckpt_dir:
+                    # the boundary save overwrites the chunk save at the same
+                    # step: the post-re-form state (new G) is what a resume
+                    # of THIS epoch must restore
+                    _save(seg.start, state, seg.active)
+            prev_active = seg.active
+
+            seg_stream = _GroupView(stream, pcfg.n_groups)
+            done = max(seg.start, start)
+            while done < seg.stop:
+                n = seg.stop - done
+                if e.ckpt_every:
+                    n = min(n, e.ckpt_every - done % e.ckpt_every)
+                state, b = eng.run(state, stream=seg_stream, steps=n,
+                                   epoch_steps=e.epoch_steps)
+                bufs.append(b)
+                done += n
+                if e.ckpt_every:
+                    _save(done, state, seg.active)
+    if e.ckpt_dir and not e.ckpt_every and start < e.steps:
+        _save(e.steps, state, prev_active)
+    wall = time.time() - t0
+
+    mbuf = ({k: np.concatenate([b[k] for b in bufs]) for k in bufs[0]}
+            if bufs else {})
+    logs = []
+    if "acc" in mbuf:
+        # buffer index j is global step start + j; acc lands where the global
+        # step hits the metrics_every stride
+        for j in range((-start) % e.metrics_every, len(mbuf["acc"]),
+                       e.metrics_every):
+            m = {"step": start + j, "acc": float(mbuf["acc"][j])}
+            if e.track_delta:
+                m["delta"] = float(mbuf["delta"][j])
+                m["l2_diam"] = float(mbuf["l2_diam"][j])
+            logs.append(m)
+
+    p0 = jax.tree.map(lambda l: l[0], state.params)
+    final = {"acc": float(acc(p0, ex, ey))}
+    if e.track_delta:
+        from ..core.simulator import coordinatewise_diameter_sum, l2_diameter
+        h = pcfg.n_groups - e.byz.n_byz_servers
+        final["delta"] = float(coordinatewise_diameter_sum(state.params, h))
+        final["l2_diam"] = float(l2_diameter(state.params, h))
+
+    prov = provenance(e.spec_hash)
+    prov["mesh"] = dict(zip(mesh.axis_names,
+                            (int(n) for n in mesh.devices.shape)))
+    prov["protocol_engine"] = pcfg0.engine
+    prov["membership"] = {
+        "plan_source": plan_source,
+        "events": [_dc.asdict(ev) for ev in plan.events],
+        "epochs": [{"start": s.start, "stop": s.stop,
+                    "active": list(s.active)} for s in segs],
+        "resumed_at": start or None,
+    }
     return RunResult(e, logs, final, wall, prov, netsim=netsim, state=state,
                      buffers=mbuf)
 

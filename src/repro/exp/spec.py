@@ -35,6 +35,7 @@ from typing import Any, Callable
 
 from ..configs.paper_models import make_mlp_problem
 from ..core.attacks import GRADIENT_ATTACKS, MODEL_ATTACKS, ByzantineSpec
+from ..core.membership import MembershipPlan, epoch_config
 from ..core.simulator import ByzSGDConfig
 from ..data.pipeline import MixtureSpec
 from ..optim import schedules as _schedules
@@ -76,7 +77,7 @@ SCHEDULES: dict[str, Callable] = {
 #: provenance without changing the run)
 SCHEDULES_WITH_DECAY = frozenset({"inverse_linear"})
 
-RUNNERS = ("stepwise", "fused", "netsim", "protocol")
+RUNNERS = ("stepwise", "fused", "netsim", "protocol", "elastic")
 DELIVERIES = ("uniform", "trace")
 PROTOCOL_ENGINES = ("naive", "sharded")
 
@@ -133,6 +134,12 @@ class Experiment:
     # set ckpt_every with ckpt_dir=None — callers pass ckpt_dir at run time.
     ckpt_every: int | None = None
     ckpt_dir: str | None = None
+    # -- elastic membership (runner="elastic"): a declarative join/leave
+    # schedule in virtual steps (core/membership.py). None with
+    # runner="elastic" means: lower the plan from the named netsim scenario's
+    # realized crash windows (scenario set), or run statically (no scenario —
+    # bit-identical to runner="protocol").
+    membership_plan: MembershipPlan | None = None
 
     # -- construction-time validation -------------------------------------
     def __post_init__(self):
@@ -153,6 +160,26 @@ class Experiment:
                              f"choose from {DELIVERIES}")
         if self.runner == "netsim" and self.delivery != "trace":
             object.__setattr__(self, "delivery", "trace")
+        if self.membership_plan is not None:
+            mp = self.membership_plan
+            if isinstance(mp, dict):
+                mp = MembershipPlan.from_dict(mp)
+                object.__setattr__(self, "membership_plan", mp)
+            if not isinstance(mp, MembershipPlan):
+                raise TypeError("membership_plan must be a MembershipPlan "
+                                f"(got {type(mp).__name__})")
+            if self.runner != "elastic":
+                raise ValueError(
+                    'membership_plan is a runner="elastic" knob (only the '
+                    "elastic runner re-forms the mesh at membership "
+                    f"boundaries); got runner={self.runner!r}")
+        if self.runner == "elastic" and self.delivery == "trace":
+            raise ValueError(
+                'runner="elastic" needs delivery="uniform": trace delivery '
+                "tables are staged at the launch fleet width and cannot "
+                "follow a membership change (a scenario still drives the "
+                'elastic run — its realized crash windows become the '
+                "membership plan)")
         if self.delivery == "trace" and self.scenario is None:
             raise ValueError('delivery="trace" needs a netsim scenario '
                              "name (Experiment.scenario)")
@@ -189,15 +216,18 @@ class Experiment:
         if self.agg_backend not in (None, "auto", "jnp", "pallas"):
             raise ValueError(f"unknown agg_backend {self.agg_backend!r}")
         if self.ckpt_every is not None:
-            if self.runner != "protocol":
+            if self.runner not in ("protocol", "elastic"):
                 raise ValueError(
-                    'ckpt_every is a runner="protocol" knob (the protocol '
-                    "engine owns the replica-stacked ByzState that "
+                    'ckpt_every is a runner="protocol"/"elastic" knob (those '
+                    "engines own the replica-stacked ByzState that "
                     f"checkpoints save); got runner={self.runner!r}")
             if self.ckpt_every < 1:
                 raise ValueError(f"ckpt_every must be >= 1, "
                                  f"got {self.ckpt_every}")
-        elif self.ckpt_dir is not None:
+        elif self.ckpt_dir is not None and self.runner != "elastic":
+            # the elastic runner reads ckpt_dir without ckpt_every: it resumes
+            # from the latest checkpoint and still saves at every membership
+            # boundary (+ the final step) even without a periodic cadence
             raise ValueError("ckpt_dir without ckpt_every does nothing; "
                              "set ckpt_every to emit checkpoints")
         if self.protocol_engine not in PROTOCOL_ENGINES:
@@ -207,11 +237,18 @@ class Experiment:
         # the cluster-shape / GAR / threat-model preconditions: lowering to
         # ByzSGDConfig runs the paper's Table-1 validation + registry checks
         self.to_config()
-        if self.runner == "protocol":
+        if self.runner in ("protocol", "elastic"):
             # the distributed path maps G co-located worker+server groups
             # onto 'rep' failure domains: shape + rule capabilities validated
             # by lowering to ProtocolConfig at construction, not at run time
-            self.to_protocol_config()
+            pcfg = self.to_protocol_config()
+            if self.runner == "elastic" and self.membership_plan is not None:
+                # every membership epoch must satisfy Table 1 for its shrunk/
+                # regrown fleet — a below-floor plan fails HERE, not mid-run
+                for seg in self.membership_plan.epochs(self.n_workers,
+                                                       self.steps):
+                    epoch_config(pcfg, seg.active,
+                                 synchronous=(self.variant == "sync"))
 
     # -- serialization -----------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
@@ -232,6 +269,9 @@ class Experiment:
             byz["attack_kwargs"] = tuple(
                 (str(k), v) for k, v in byz.get("attack_kwargs", ()))
             d["byz"] = ByzantineSpec(**byz)
+        mp = d.get("membership_plan")
+        if isinstance(mp, dict):
+            d["membership_plan"] = MembershipPlan.from_dict(mp)
         return cls(**d)
 
     @property

@@ -174,6 +174,32 @@ def crash_storm(**kw) -> Scenario:
     return Scenario(name="crash_storm", n_servers=n_ps, n_workers=n_w, **kw)
 
 
+def membership_churn(**kw) -> Scenario:
+    """One co-located group (server g + worker n_ps+g) fail-stops mid-run and
+    recovers — the elastic-training scenario. The elastic runner lowers the
+    *realized* crash windows into a MembershipPlan
+    (``repro.core.membership.plan_from_trace``): the group leaves before the
+    first step finishing after ``t_down`` and stays out for the outage
+    duration converted at the honest step rate, so G shrinks 5 -> 4 -> 5.
+    Defaults are calibrated to the healthy cadence (~8.5 virtual ms/step
+    under the default latency): down around step 8, back around step 16 of a
+    24-step run. Shape defaults keep the surviving quorums exactly
+    satisfiable while the group is down (4-of-5 up, q = 4)."""
+    n_ps = kw.pop("n_servers", 5)
+    n_w = kw.pop("n_workers", 5)
+    group = kw.pop("churn_group", n_ps - 1)
+    t_down = kw.pop("t_down", 66.0)
+    t_up = kw.pop("t_up", 134.0)
+    kw.setdefault("f_workers", 1)
+    kw.setdefault("T", 5)
+    windows = (CrashWindow(node=group, t_down=t_down, t_up=t_up),
+               CrashWindow(node=n_ps + group, t_down=t_down, t_up=t_up))
+    kw.setdefault("faults", FaultPlan(crashes=CrashPlan(windows)))
+    kw.setdefault("latency", LognormalLatency(1.0, 0.1))
+    return Scenario(name="membership_churn", n_servers=n_ps, n_workers=n_w,
+                    **kw)
+
+
 def byzantine_plus_slow(**kw) -> Scenario:
     """The compound adversary: f_w Byzantine workers that are ALSO slow (their
     messages arrive last, maximizing their staleness leverage) — netsim makes
@@ -208,6 +234,7 @@ SCENARIOS = {
     "partitioned_dmc": partitioned_dmc,
     "crash_storm": crash_storm,
     "byzantine_plus_slow": byzantine_plus_slow,
+    "membership_churn": membership_churn,
 }
 
 

@@ -68,10 +68,13 @@ def disagreement(logits, tokens, mask=None) -> float:
 class DetectorConfig:
     """Envelope test knobs: a replica strikes when its RMS logit distance to
     the quorum answer exceeds ``abs_tol`` AND ``rel`` times the active-set
-    median distance; ``patience`` consecutive strikes flag it."""
+    median distance; ``patience`` consecutive strikes flag it. A re-admitted
+    replica serves ``probation`` reads under a zero-patience rule — one
+    outlier read re-ejects it immediately."""
     patience: int = 3
     rel: float = 4.0
     abs_tol: float = 1e-4
+    probation: int = 16
 
 
 class DivergenceDetector:
@@ -90,6 +93,7 @@ class DivergenceDetector:
         self.cfg = cfg or DetectorConfig()
         self.strikes = np.zeros(self.n, np.int64)
         self.flagged = np.zeros(self.n, bool)
+        self.probation = np.zeros(self.n, np.int64)   # reads left on watch
         self.reads = 0
 
     @staticmethod
@@ -113,8 +117,12 @@ class DivergenceDetector:
         thresh = max(self.cfg.abs_tol, self.cfg.rel * envelope)
         outlier = active & (dist > thresh)
         self.strikes = np.where(outlier, self.strikes + 1, 0)
-        newly = (~self.flagged) & (self.strikes >= self.cfg.patience)
+        # probationers (recent re-admissions) flag on a single outlier read
+        newly = (~self.flagged) & ((self.strikes >= self.cfg.patience)
+                                   | (outlier & (self.probation > 0)))
         self.flagged |= newly
+        self.probation = np.where(active, np.maximum(self.probation - 1, 0),
+                                  self.probation)
         # eject worst-first while the read quorum survives (>= 2f+1 active)
         floor = 2 * self.f + 1
         ejected = []
@@ -126,6 +134,14 @@ class DivergenceDetector:
             ejected.append(int(i))
             n_active -= 1
         return ejected
+
+    def readmit(self, i: int) -> None:
+        """Reset replica i's record and start its probation window (callers
+        re-admit the healed replica into the pool first — see
+        ``QuorumService.readmit``)."""
+        self.strikes[i] = 0
+        self.flagged[i] = False
+        self.probation[i] = self.cfg.probation
 
 
 def markdown_table() -> str:

@@ -171,3 +171,21 @@ class ReplicaPool:
             return False
         self.active[i] = False
         return True
+
+    def reactivate(self, i: int, healed=None) -> bool:
+        """Re-admit an ejected replica, healing its params first.
+
+        The serving analogue of elastic re-admission in training
+        (``repro.core.membership.reform_params``): the returning replica is
+        overwritten with ``healed`` — by default :meth:`consolidated`, the
+        DMC median of the currently active replicas — so a corrupted model
+        never rejoins the read quorum carrying its corruption. Returns False
+        when the replica is already active."""
+        if self.active[i]:
+            return False
+        if healed is None:
+            healed = self.consolidated()
+        self.params = jax.tree.map(
+            lambda l, h: l.at[i].set(h.astype(l.dtype)), self.params, healed)
+        self.active[i] = True
+        return True

@@ -103,6 +103,19 @@ class QuorumService:
         self.requests.append(req)
         return req
 
+    # -- membership --------------------------------------------------------
+    def readmit(self, i: int) -> bool:
+        """Re-admit an ejected replica: heal its params from the active
+        quorum's DMC median (:meth:`ReplicaPool.reactivate`) and reset its
+        detector record with a probation window (one outlier read re-ejects
+        it). The serving half of elastic membership — see
+        ``repro.core.membership`` for the training half. Returns False when
+        the replica is already active."""
+        if not self.pool.reactivate(i):
+            return False
+        self.detector.readmit(i)
+        return True
+
     # -- quorum read (+ detector, + retry-on-ejection) ---------------------
     def _read(self, logits) -> np.ndarray:
         """One quorum read of per-replica logits ``[R, n_slots, V]`` ->
@@ -214,7 +227,8 @@ class QuorumService:
             "replicas": [
                 {"id": i, "active": bool(self.pool.active[i]),
                  "flagged": bool(self.detector.flagged[i]),
-                 "strikes": int(self.detector.strikes[i])}
+                 "strikes": int(self.detector.strikes[i]),
+                 "probation": int(self.detector.probation[i])}
                 for i in range(self.pool.n_replicas)
             ],
         }

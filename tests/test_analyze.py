@@ -187,6 +187,83 @@ def test_cache_key_requires_key_method():
 
 
 # ---------------------------------------------------------------------------
+# REPRO-MEMBERSHIP-FLOOR
+# ---------------------------------------------------------------------------
+
+
+MEMBERSHIP_TRIPPING = [
+    # unguarded shrink of a liveness mask
+    ("class Pool:\n"
+     "    def eject(self, i):\n"
+     "        self.active[i] = False\n"),
+    # in-place intersection, module-level helper without any floor check
+    ("def prune(pool, mask):\n"
+     "    pool.active &= mask\n"),
+    # symbolic: the plan shrinks the fleet below 2 groups
+    ("register(Experiment(name='bad', n_workers=2, f_workers=0,\n"
+     "    n_servers=2, f_servers=0,\n"
+     "    membership_plan=MembershipPlan(events=(\n"
+     "        MembershipEvent(step=4, kind='leave', group=1),))))\n"),
+    # symbolic: shrink to G'=4 caps f_ps' at 0 under a present Byz server
+    ("register(Experiment(name='bad2', n_workers=5, f_workers=1,\n"
+     "    n_servers=5, f_servers=1,\n"
+     "    byz=ByzantineSpec(server_attack='lie', n_byz_servers=1),\n"
+     "    membership_plan=MembershipPlan(events=(\n"
+     "        MembershipEvent(step=4, kind='leave', group=4),))))\n"),
+]
+
+MEMBERSHIP_CLEAN = [
+    # shrink behind the quorum floor (ReplicaPool.deactivate shape)
+    ("class Pool:\n"
+     "    def eject(self, i):\n"
+     "        if self.n_active - 1 < self.quorum_floor:\n"
+     "            return False\n"
+     "        self.active[i] = False\n"
+     "        return True\n"),
+    # explicit 2f+1 arithmetic counts as a guard
+    ("def eject(active, i, f):\n"
+     "    if active.sum() - 1 >= 2 * f + 1:\n"
+     "        active[i] = False\n"),
+    # growing the mask is never a shrink
+    ("class Pool:\n"
+     "    def readmit(self, i):\n"
+     "        self.active[i] = True\n"),
+    # a floor-respecting churn plan
+    ("register(Experiment(name='ok', n_workers=5, f_workers=1,\n"
+     "    n_servers=5, f_servers=1,\n"
+     "    membership_plan=MembershipPlan(events=(\n"
+     "        MembershipEvent(step=4, kind='leave', group=4),\n"
+     "        MembershipEvent(step=8, kind='join', group=4)))))\n"),
+    # unresolvable shape: skipped, owned by the runtime validator
+    ("register(Experiment(name='dyn', n_workers=G,\n"
+     "    membership_plan=MembershipPlan(events=EVENTS)))\n"),
+]
+
+
+@pytest.mark.parametrize("src", MEMBERSHIP_TRIPPING)
+def test_membership_floor_trips(src):
+    assert hits(src, "REPRO-MEMBERSHIP-FLOOR"), src
+
+
+@pytest.mark.parametrize("src", MEMBERSHIP_CLEAN)
+def test_membership_floor_clean(src):
+    assert hits(src, "REPRO-MEMBERSHIP-FLOOR") == []
+
+
+def test_membership_floor_resolves_common_dict_expansion():
+    src = (
+        "_COMMON = dict(n_workers=5, f_workers=1, n_servers=5, f_servers=1)\n"
+        "register(Experiment(name='bad3',\n"
+        "    byz=ByzantineSpec(worker_attack='alie', n_byz_workers=1),\n"
+        "    membership_plan=MembershipPlan(events=(\n"
+        "        MembershipEvent(step=4, kind='leave', group=4),\n"
+        "        MembershipEvent(step=5, kind='leave', group=3),)),\n"
+        "    **_COMMON))\n")
+    found = hits(src, "REPRO-MEMBERSHIP-FLOOR")
+    assert found and "bad3" in found[0].message
+
+
+# ---------------------------------------------------------------------------
 # suppression + baseline mechanics
 # ---------------------------------------------------------------------------
 
@@ -276,6 +353,7 @@ def test_rule_registry_covers_both_layers():
     ids = {r.rule_id for r in rules()}
     assert {"REPRO-HOST-SYNC", "REPRO-ENV-IMPORT", "REPRO-ENV-MUTATE",
             "REPRO-CACHE-KEY", "REPRO-BYZ-BOUNDS", "REPRO-AGG-PARITY",
+            "REPRO-MEMBERSHIP-FLOOR",
             "REPRO-HLO-DONATION", "REPRO-HLO-HOST-TRANSFER",
             "REPRO-HLO-RECOMPILE", "REPRO-HLO-COLLECTIVES"} <= ids
     table = markdown_table()

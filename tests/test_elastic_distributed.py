@@ -1,0 +1,21 @@
+"""Elastic membership on 8 forced host devices (subprocess — the device
+count must be set before jax initialises): G 5 -> 4 -> 5 with real mesh
+re-formation, plus the checkpointed kill-and-resume round trip."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_elastic_end_to_end():
+    runner = os.path.join(os.path.dirname(__file__), "_elastic_runner.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run([sys.executable, runner], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ELASTIC_TESTS_PASS" in out.stdout, out.stdout

@@ -1,0 +1,249 @@
+"""core/membership + the elastic runner: plan mechanics, churn-driven
+quorums, replica re-forming, netsim lowering, and the elastic acceptance
+gates (empty-plan bit-identity vs runner="protocol", churn convergence vs
+the static oracle, kill-and-resume mid-churn)."""
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+import repro.exp as exp
+from repro.core.membership import (MembershipEpoch, MembershipEvent,
+                                   MembershipFloorError, MembershipPlan,
+                                   epoch_config, plan_from_trace,
+                                   reform_params)
+from repro.netsim import ClusterSim, scenarios
+
+# ---------------------------------------------------------------------------
+# plan mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        MembershipEvent(step=3, kind="vanish", group=0)
+    with pytest.raises(ValueError, match="boundaries"):
+        MembershipEvent(step=0, kind="leave", group=0)
+    with pytest.raises(ValueError, match="group"):
+        MembershipEvent(step=3, kind="leave", group=-1)
+
+
+def test_plan_normalizes_and_roundtrips():
+    plan = MembershipPlan(events=(
+        {"step": 16, "kind": "join", "group": 4},       # dict form accepted
+        MembershipEvent(step=8, kind="leave", group=4)))
+    assert [e.step for e in plan.events] == [8, 16]      # sorted
+    assert MembershipPlan.from_dict(plan.to_dict()) == plan
+    assert MembershipPlan.from_dict({"events": []}) == MembershipPlan()
+
+
+def test_epochs_segmentation():
+    plan = MembershipPlan(events=(
+        MembershipEvent(step=8, kind="leave", group=4),
+        MembershipEvent(step=16, kind="join", group=4)))
+    segs = plan.epochs(5, 24)
+    assert [(s.start, s.stop, s.active) for s in segs] == [
+        (0, 8, (0, 1, 2, 3, 4)),
+        (8, 16, (0, 1, 2, 3)),
+        (16, 24, (0, 1, 2, 3, 4))]
+    # empty plan: one full-run epoch at the launch fleet
+    assert MembershipPlan().epochs(5, 24) == (
+        MembershipEpoch(0, 24, (0, 1, 2, 3, 4)),)
+
+
+def test_epochs_validation():
+    with pytest.raises(ValueError, match="outside the run"):
+        MembershipPlan(events=(
+            MembershipEvent(step=30, kind="leave", group=0),)).epochs(5, 24)
+    with pytest.raises(ValueError, match="not active"):
+        MembershipPlan(events=(
+            MembershipEvent(step=4, kind="leave", group=7),)).epochs(5, 24)
+    with pytest.raises(ValueError, match="already active"):
+        MembershipPlan(events=(
+            MembershipEvent(step=4, kind="join", group=2),)).epochs(5, 24)
+
+
+def test_epochs_allow_joins_beyond_launch_fleet():
+    plan = MembershipPlan(events=(
+        MembershipEvent(step=6, kind="join", group=5),))
+    segs = plan.epochs(5, 12)
+    assert segs[-1].active == (0, 1, 2, 3, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# churn-driven quorum derivation
+# ---------------------------------------------------------------------------
+
+
+def _pcfg(**kw):
+    from repro.core.protocol import ProtocolConfig
+    return ProtocolConfig.derive(5, f_workers=1, f_servers=1, T=5, **kw)
+
+
+def test_epoch_config_identity_at_launch_size():
+    pcfg = _pcfg()
+    assert epoch_config(pcfg, (0, 1, 2, 3, 4)) is pcfg
+
+
+def test_epoch_config_shrinks_quorums():
+    out = epoch_config(_pcfg(), (0, 1, 2, 3))
+    assert (out.n_groups, out.f_workers, out.f_servers) == (4, 1, 0)
+    assert (out.q_workers, out.q_servers) == (3, 4)
+    # the quorum window caps f_w at (G'-1)//3 even for sync: at G'=3 no
+    # fault is tolerable, the full fleet is the quorum
+    sync = epoch_config(_pcfg(), (0, 1, 2), synchronous=True)
+    assert (sync.f_workers, sync.q_workers) == (0, 3)
+
+
+def test_epoch_config_floor_errors():
+    with pytest.raises(MembershipFloorError, match=">= 2 groups"):
+        epoch_config(_pcfg(), (0,))
+    from repro.core.attacks import ByzantineSpec
+    byz = _pcfg(byz=ByzantineSpec(server_attack="lie", n_byz_servers=1))
+    with pytest.raises(MembershipFloorError, match="outvote"):
+        epoch_config(byz, (0, 1, 2, 3))    # f_ps' caps at 0 < 1 present
+
+
+# ---------------------------------------------------------------------------
+# replica re-forming
+# ---------------------------------------------------------------------------
+
+
+def test_reform_params_carries_survivors_and_seeds_joiners():
+    params = {"w": jax.numpy.arange(20.0).reshape(5, 4)}
+    shrunk = reform_params(params, (0, 1, 2, 3, 4), (0, 1, 2, 3))
+    np.testing.assert_array_equal(np.asarray(shrunk["w"]),
+                                  np.asarray(params["w"][:4]))
+    grown = reform_params(shrunk, (0, 1, 2, 3), (0, 1, 2, 3, 4))
+    np.testing.assert_array_equal(np.asarray(grown["w"][:4]),
+                                  np.asarray(shrunk["w"]))
+    med = np.median(np.asarray(shrunk["w"]), axis=0)
+    np.testing.assert_array_equal(np.asarray(grown["w"][4]), med)
+    assert grown["w"].dtype == params["w"].dtype
+
+
+def test_reform_params_needs_a_survivor():
+    params = {"w": jax.numpy.ones((2, 3))}
+    with pytest.raises(MembershipFloorError, match="surviving"):
+        reform_params(params, (0, 1), (2, 3))
+
+
+# ---------------------------------------------------------------------------
+# netsim lowering
+# ---------------------------------------------------------------------------
+
+
+def test_plan_from_trace_realizes_multi_step_outage():
+    sc = scenarios.build("membership_churn", steps=24)
+    trace = ClusterSim(sc).run()
+    plan = plan_from_trace(sc, trace)
+    kinds = [(e.kind, e.group) for e in plan.events]
+    assert kinds == [("leave", 4), ("join", 4)]
+    leave, join = plan.events[0].step, plan.events[1].step
+    assert 1 <= leave < join < 24
+    # the outage spans the crash duration at the honest step rate, not the
+    # post-recovery completion burst (which would compress it to one step)
+    assert join - leave >= 4
+
+
+def test_plan_from_trace_crash_without_recovery_is_leave_only():
+    sc = scenarios.build("membership_churn", steps=24,
+                         t_down=66.0, t_up=float("inf"))
+    plan = plan_from_trace(sc, ClusterSim(sc).run())
+    assert [e.kind for e in plan.events] == ["leave"]
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_membership_plan_requires_elastic_runner():
+    plan = MembershipPlan(events=(
+        MembershipEvent(step=4, kind="leave", group=4),))
+    with pytest.raises(ValueError, match="elastic"):
+        exp.get("smoke", membership_plan=plan)
+    with pytest.raises(ValueError, match="uniform"):
+        exp.get("elastic/static", delivery="trace")
+    # a plan that violates the floor is rejected at construction
+    from repro.core.attacks import ByzantineSpec
+    with pytest.raises(MembershipFloorError, match="outvote"):
+        exp.get("elastic/planned_churn",
+                byz=ByzantineSpec(server_attack="lie", n_byz_servers=1))
+
+
+def test_membership_plan_json_roundtrip():
+    e = exp.get("elastic/planned_churn")
+    back = exp.Experiment.from_dict(e.to_dict())
+    assert back == e and back.membership_plan == e.membership_plan
+
+
+# ---------------------------------------------------------------------------
+# elastic runner acceptance gates
+# ---------------------------------------------------------------------------
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_empty_plan_elastic_bit_identical_to_protocol():
+    rp = exp.run("elastic/static", runner="protocol")
+    re_ = exp.run("elastic/static")
+    _assert_trees_equal(rp.state.params, re_.state.params)
+    for k in rp.buffers:
+        np.testing.assert_array_equal(np.asarray(rp.buffers[k]),
+                                      np.asarray(re_.buffers[k]), err_msg=k)
+    assert rp.logs == re_.logs and rp.final == re_.final
+
+
+def test_churn_converges_within_tolerance_of_static():
+    static = exp.run("elastic/static")
+    churned = exp.run("elastic/planned_churn")
+    assert churned.final["acc"] >= static.final["acc"] - 0.1
+    mem = churned.provenance["membership"]
+    assert [len(ep["active"]) for ep in mem["epochs"]] == [5, 4, 5]
+    assert mem["plan_source"] == "spec"
+
+
+def test_netsim_churn_lowers_and_converges():
+    res = exp.run("elastic/netsim_churn")
+    mem = res.provenance["membership"]
+    assert mem["plan_source"] == "scenario:membership_churn"
+    assert [len(ep["active"]) for ep in mem["epochs"]] == [5, 4, 5]
+    assert res.final["acc"] >= 0.8
+    assert res.netsim is not None and "virtual_ms" in res.netsim
+
+
+def test_kill_and_resume_mid_churn_bit_identical(tmp_path):
+    oracle = exp.run("elastic/planned_churn")
+    d = os.path.join(str(tmp_path), "ck")
+    full = exp.run("elastic/planned_churn", ckpt_dir=d, ckpt_every=4)
+    _assert_trees_equal(oracle.state.params, full.state.params)
+
+    # kill after step 12 — mid-shrunk-epoch, so the resume restores at G'=4
+    for name in sorted(os.listdir(d)):
+        if int(name.split("_")[-1]) > 12:
+            shutil.rmtree(os.path.join(d, name))
+    resumed = exp.run("elastic/planned_churn", ckpt_dir=d, ckpt_every=4)
+    assert resumed.provenance["membership"]["resumed_at"] == 12
+    _assert_trees_equal(oracle.state.params, resumed.state.params)
+    assert resumed.final == oracle.final
+    # resumed logs splice bit-exactly onto the uninterrupted run's tail
+    by_step = {m["step"]: m for m in oracle.logs}
+    assert resumed.logs and all(m == by_step[m["step"]]
+                                for m in resumed.logs)
+
+
+def test_elastic_final_checkpoint_without_ckpt_every(tmp_path):
+    d = os.path.join(str(tmp_path), "ck")
+    res = exp.run("elastic/planned_churn", ckpt_dir=d)
+    from repro.checkpoint import checkpointer as ck
+    assert ck.latest_step(d) == res.experiment.steps
+    meta = ck.read_manifest(d, res.experiment.steps).get("meta")
+    assert meta["elastic"] and list(meta["active"]) == [0, 1, 2, 3, 4]

@@ -229,3 +229,60 @@ class TestRequestFlood:
         pc = tr.percentiles((50, 95, 99))
         assert pc["p50"] <= pc["p95"] <= pc["p99"]
         assert "deadline" in tr.summary()
+
+
+# ---------------------------------------------------------------------------
+# fault-plan composition (crash x partition x slow churn)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultComposition:
+    def test_next_up_chains_back_to_back_windows(self):
+        from repro.netsim.faults import INF, CrashPlan, CrashWindow
+        plan = CrashPlan((CrashWindow(node=2, t_down=10.0, t_up=20.0),
+                          CrashWindow(node=2, t_down=20.0, t_up=30.0),
+                          CrashWindow(node=3, t_down=5.0, t_up=INF)))
+        # inside the first window, recovery chains through the second
+        assert plan.next_up(2, 12.0) == 30.0
+        assert plan.next_up(2, 30.0) == 30.0      # boundary is up
+        assert plan.next_up(2, 5.0) == 5.0        # before any window
+        assert plan.next_up(3, 6.0) == INF        # crash without recovery
+        assert not plan.is_up(2, 20.0) and plan.is_up(2, 30.0)
+
+    def test_crash_inside_partition_window(self):
+        """A node that crashes while already partitioned: liveness and
+        reachability compose independently, and the realized trace still
+        fills every quorum slot from the connected survivors."""
+        from repro.netsim.faults import (CrashPlan, CrashWindow, FaultPlan,
+                                         PartitionPlan, PartitionWindow)
+        faults = FaultPlan(
+            crashes=CrashPlan((CrashWindow(node=1, t_down=20.0, t_up=60.0),)),
+            partitions=PartitionPlan((PartitionWindow(
+                t0=10.0, t1=80.0, groups=((1,), tuple(range(2, 12)))),)))
+        assert not faults.is_up(1, 30.0)          # crashed inside the cut
+        assert faults.blocked(1, 5, 30.0) and faults.blocked(5, 1, 15.0)
+        assert not faults.blocked(0, 5, 30.0)     # unlisted node is free
+        assert faults.is_up(1, 60.0)              # recovers inside the cut
+        assert faults.blocked(1, 5, 70.0)         # ... but stays partitioned
+        sc, t = _run("baseline_uniform", steps=20, faults=faults)
+        assert t.pull_idx.min() >= 0 and t.pull_idx.max() < sc.n_servers
+        assert t.push_idx.min() >= 0 and t.push_idx.max() < sc.n_workers
+        tot = t.ledger.totals()
+        assert sum(d["dropped_msgs"] for d in tot.values()) > 0
+
+    def test_slow_churn_only_overlapping_crashed_node(self):
+        """SlowChurn.only pinning a node that also crashes: latency scaling
+        applies whenever the node is addressed, liveness is orthogonal."""
+        from repro.netsim.faults import (CrashPlan, CrashWindow, FaultPlan,
+                                         SlowChurn)
+        faults = FaultPlan(
+            crashes=CrashPlan((CrashWindow(node=6, t_down=0.0, t_up=40.0),)),
+            churn=SlowChurn(n_nodes=12, n_slow=1, factor=8.0, only=(6,)))
+        assert faults.latency_scale(6, 0, 10.0) == 8.0   # slow even if down
+        assert not faults.is_up(6, 10.0)
+        assert faults.is_up(6, 40.0)
+        assert faults.latency_scale(0, 6, 50.0) == 8.0   # slow after recovery
+        assert faults.latency_scale(0, 7, 50.0) == 1.0   # only= is exhaustive
+        sc, t = _run("baseline_uniform", steps=15, faults=faults)
+        assert t.push_idx.min() >= 0 and t.push_idx.max() < sc.n_workers
+        assert (t.pull_stale >= 0).all() and (t.push_stale >= 0).all()

@@ -267,3 +267,78 @@ def test_protocol_ckpt_roundtrip_into_pool(tmp_path):
     for a, b in zip(jax.tree.leaves(res.state.params),
                     jax.tree.leaves(res2.state.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# elastic re-admission (corrupt -> eject -> heal -> readmit)
+# ---------------------------------------------------------------------------
+
+
+def test_reactivate_heals_from_quorum_median():
+    p = _tiny_params(jax.random.PRNGKey(6))
+    pool = ReplicaPool.from_params(p, R, f=F).corrupt(
+        ByzantineSpec(server_attack="reversed", n_byz_servers=1),
+        jax.random.PRNGKey(7))
+    assert pool.deactivate(R - 1)
+    assert not pool.reactivate(0)          # already active: no-op
+    assert pool.reactivate(R - 1)          # healed from the honest median
+    assert pool.n_active == R
+    for a, b in zip(jax.tree.leaves(pool.single(R - 1)),
+                    jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_detector_probation_reejects_on_single_outlier():
+    det = DivergenceDetector(R, F, DetectorConfig(patience=3, probation=4))
+    active = np.ones(R, bool)
+    det.flagged[3] = True
+    det.readmit(3)
+    assert not det.flagged[3] and det.probation[3] == 4
+    dist = np.array([0.0, 0.0, 0.0, 1.0])
+    assert det.observe(dist, active) == [3]   # zero patience on probation
+    assert det.flagged[3]
+
+
+def test_detector_probation_expires_back_to_patience():
+    det = DivergenceDetector(R, F, DetectorConfig(patience=3, probation=2))
+    active = np.ones(R, bool)
+    det.readmit(3)
+    clean = np.zeros(R)
+    det.observe(clean, active)
+    det.observe(clean, active)
+    assert det.probation[3] == 0              # probation served cleanly
+    dist = np.array([0.0, 0.0, 0.0, 1.0])
+    assert det.observe(dist, active) == []    # patience rule again
+    assert det.observe(dist, active) == []
+    assert det.observe(dist, active) == [3]
+
+
+def test_service_eject_heal_readmit_token_identical(bundle, tparams):
+    prompts = [[3, 5, 7], [11, 2, 4]]
+    base, _ = _gen(ReplicaPool.from_params(tparams, 1, f=0), bundle,
+                   prompts, 5)
+    pool = ReplicaPool.from_params(tparams, R, f=F).corrupt(
+        ByzantineSpec(server_attack="lie", n_byz_servers=1),
+        jax.random.PRNGKey(5))
+    svc = QuorumService(pool, bundle, n_slots=2, max_len=32)
+    outs = svc.generate(prompts, max_new=5)
+    assert outs == base                       # corrupt run stays identical
+    rep = svc.report()
+    assert rep["n_active"] == R - 1
+    assert [i for _, i in rep["ejections"]] == [R - 1]
+
+    assert svc.readmit(R - 1)                 # heal + re-admit
+    assert not svc.readmit(R - 1)             # already back: no-op
+    assert svc.pool.n_active == R
+    assert svc.detector.probation[R - 1] == svc.detector.cfg.probation
+    for a, b in zip(jax.tree.leaves(svc.pool.single(R - 1)),
+                    jax.tree.leaves(tparams)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    outs2 = svc.generate(prompts, max_new=5)
+    assert outs2 == base                      # healed fleet stays identical
+    rep2 = svc.report()
+    assert rep2["n_active"] == R              # the healed replica stayed in
+    assert len(rep2["ejections"]) == 1        # no post-readmit ejections
+    assert rep2["replicas"][R - 1]["active"]
+    assert not rep2["replicas"][R - 1]["flagged"]
