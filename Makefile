@@ -18,9 +18,9 @@ test: tier1
 lint:
 	$(ENV) $(PY) -m repro.analyze --hlo --json results/analyze/report.json
 
-# layer 1 only (jax-free, sub-second) — pre-commit speed
+# layer 1 only, taint scoped to changed-file SCC (jax-free) — pre-commit speed
 lint-fast:
-	$(ENV) $(PY) -m repro.analyze
+	$(ENV) $(PY) -m repro.analyze --fast
 
 # full tier-1 gate: everything, stop at first failure
 tier1:

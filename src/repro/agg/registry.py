@@ -64,6 +64,14 @@ class Aggregator:
         return self.masked_fn is not None or (
             self.selection_based and self.weights_from_d2 is not None)
 
+    @property
+    def is_sanitizer(self) -> bool:
+        """Whether the rule launders Byzantine influence: a nonzero
+        breakdown point (``n >= k*f + c`` with ``k >= 2``). ``mean`` is
+        not one. ``repro.analyze``'s REPRO-TAINT-BYZ derives its
+        sanitizer set from exactly this predicate (over the AST)."""
+        return self.requires[0] >= 2
+
     def validate(self, n: int, f: int) -> None:
         """Uniform f-bounds check from the spec's mechanical requirement."""
         k, c = self.requires

@@ -29,7 +29,14 @@ def main(argv=None) -> int:
                     help="write the findings report JSON here")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite results/analyze/baseline.json from the "
-                         "current findings (keep it empty; prefer fixes)")
+                         "current findings, pruning stale entries and "
+                         "keeping scopes not run (keep it short; prefer "
+                         "fixes)")
+    ap.add_argument("--fast", action="store_true",
+                    help="lint only the git-changed files (file-scope "
+                         "rules) and scope the interprocedural taint "
+                         "analysis to their call-graph component — the "
+                         "`make lint-fast` pre-commit lane")
     ap.add_argument("--root", default=None,
                     help="repo root (default: cwd, or the checkout "
                          "containing this package)")
@@ -49,7 +56,11 @@ def main(argv=None) -> int:
         return 0
 
     root = args.root or _find_root()
-    found = lint_repo(root)
+    changed = _changed_files(root) if args.fast else None
+    if args.fast:
+        from .rules import taint_byz
+        taint_byz.scope_to(changed)
+    found = lint_repo(root, only_files=changed)
     scopes = {"file", "repo"}
     if args.hlo:
         scopes.add("hlo")
@@ -64,8 +75,12 @@ def main(argv=None) -> int:
              "hlo": bool(args.hlo)}
 
     if args.update_baseline:
-        path = F.write_baseline(found, os.path.join(root, F.BASELINE_PATH))
-        print(f"baseline: {len(found)} finding(s) -> {path}")
+        rule_scopes = {r.rule_id: r.scope for r in registry.rules()}
+        path, pruned = F.refresh_baseline(
+            found, os.path.join(root, F.BASELINE_PATH), root, scopes,
+            rule_scopes)
+        note = f" ({len(pruned)} stale entries pruned)" if pruned else ""
+        print(f"baseline: {len(found)} finding(s) -> {path}{note}")
         return 0
 
     if args.json:
@@ -82,6 +97,20 @@ def main(argv=None) -> int:
     print("clean"
           + ("" if args.hlo else " (layer 1 only; --hlo for layer 2)"))
     return 0
+
+
+def _changed_files(root: str) -> set[str] | None:
+    """Rel paths changed vs HEAD (`--fast` scope); None -> full analysis."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            cwd=root, capture_output=True, text=True, check=True,
+            timeout=10).stdout
+    except Exception:
+        return None
+    return {ln.strip() for ln in out.splitlines()
+            if ln.strip().endswith(".py")}
 
 
 def _find_root() -> str:

@@ -54,14 +54,38 @@ def lint_file(path: str, root: str, source: str | None = None,
     return found
 
 
-def lint_repo(root: str, include_repo_rules: bool = True) -> list[Finding]:
-    """Layer 1 over the whole tree: all file rules + repo-scope rules."""
+def lint_repo(root: str, include_repo_rules: bool = True,
+              only_files: set[str] | None = None) -> list[Finding]:
+    """Layer 1 over the whole tree: all file rules + repo-scope rules.
+
+    Repo-scope findings honor inline suppressions too: each finding is
+    attributed to a file:line (e.g. a preset registration line), and a
+    ``# analyze: ignore[RULE-ID] why`` on that line suppresses it.
+
+    ``only_files`` (rel paths) restricts the *file-scope* pass — the
+    ``--fast`` pre-commit lane lints only the changed files; repo-scope
+    rules are whole-tree invariants and always see everything.
+    """
     found: list[Finding] = []
     for path in lint_paths(root):
+        if (only_files is not None
+                and os.path.relpath(path, root) not in only_files):
+            continue
         found.extend(lint_file(path, root))
     if include_repo_rules:
+        sup_cache: dict[str, list] = {}
         for rule in rules(scope="repo"):
-            found.extend(rule.check(root))
+            for f in rule.check(root):
+                if f.path not in sup_cache:
+                    fpath = os.path.join(root, f.path)
+                    try:
+                        with open(fpath) as fh:
+                            src = fh.read()
+                        sup_cache[f.path], _ = scan_suppressions(src, f.path)
+                    except OSError:
+                        sup_cache[f.path] = {}
+                if not is_suppressed(f, sup_cache[f.path]):
+                    found.append(f)
     return found
 
 

@@ -5,6 +5,7 @@ Layer-1 rules (AST, jax-free) import eagerly; the layer-2 HLO audit
 to check time, so ``python -m repro.analyze`` stays fast and runnable
 before any accelerator runtime is up.
 """
-from . import (cache_keys, env_hygiene, host_sync,  # noqa: F401
-               membership_floor, preconditions, registry_parity)
+from . import (cache_keys, dead_seed, determinism,  # noqa: F401
+               env_hygiene, host_sync, membership_floor, pallas_audit,
+               preconditions, registry_parity, taint_byz)
 from .. import hlo  # noqa: F401  (registers the REPRO-HLO-* rules)

@@ -34,9 +34,19 @@ def _methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
     return {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
 
 
+def _is_property(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = dec.id if isinstance(dec, ast.Name) else \
+            dec.attr if isinstance(dec, ast.Attribute) else ""
+        if name in ("property", "cached_property"):
+            return True
+    return False
+
+
 def _transitive_reads(cls_methods: dict, roots: list[str]) -> set[str]:
     """self.X reads reachable from the named methods through same-class
-    self.m() calls."""
+    self.m() calls; ``@property`` reads resolve one level into the
+    property body's own field reads."""
     reads: set[str] = set()
     seen: set[str] = set()
     stack = [m for m in roots if m in cls_methods]
@@ -50,6 +60,12 @@ def _transitive_reads(cls_methods: dict, roots: list[str]) -> set[str]:
         for callee in self_method_calls(node):
             if callee in cls_methods:
                 stack.append(callee)
+    # a `self.prop` read is really a read of whatever the property body
+    # reads — resolve one level so derived properties don't mask (or
+    # falsely add) the underlying config fields
+    props = {n for n, fn in cls_methods.items() if _is_property(fn)}
+    for p in sorted(reads & props):
+        reads |= self_attr_reads(cls_methods[p])
     # called helper methods show up as attribute reads too; they're code,
     # not config — drop them
     return reads - set(seen) - set(cls_methods)

@@ -1,0 +1,154 @@
+"""REPRO-DETERMINISM: bit-identical-resume hazards.
+
+PR 8's elastic membership guarantees bit-identical resume: replaying the
+same event log over the same seed must reproduce the same parameters.
+Three hazard classes break that silently — no functional test fails,
+results just stop being reproducible:
+
+* **unordered iteration** — a ``for``/comprehension/reduction driven by a
+  ``set`` (literal or ``set(...)`` call) iterates in hash order, which
+  varies across processes (PYTHONHASHSEED) — if that order feeds trace
+  order, cache keys, or manifests, resumes diverge. Wrap in
+  ``sorted(...)``.
+* **unsorted hash payloads** — ``json.dumps`` without ``sort_keys=True``
+  feeding a digest (``hashlib.*``/``hash``) keys the cache on dict
+  insertion order.
+* **host entropy in traced code** — ``random.*`` / ``np.random.*`` /
+  ``time.*`` / ``datetime.now`` inside a traced-sensitive function (see
+  :func:`repro.analyze.dataflow.sensitive_functions`) bakes a
+  trace-time host value into the compiled computation. ``jax.random``
+  (key-threaded, deterministic) is exempt, as is wall-clock timing in
+  plain host code such as the epoch runners.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..astlint import dotted_name
+from ..dataflow import owner_map, sensitive_functions
+from ..findings import Finding
+from ..registry import Rule, register
+
+_HASH_FNS = {"md5", "sha1", "sha256", "sha512", "blake2b", "blake2s",
+             "hash", "update"}
+_REDUCERS = {"sum", "min", "max", "reduce", "prod"}
+_HOST_ENTROPY_PREFIXES = ("random.", "np.random.", "numpy.random.",
+                          "time.", "datetime.")
+_HOST_ENTROPY_EXACT = {"time", "datetime.now", "datetime.utcnow",
+                       "perf_counter", "monotonic", "getrandbits", "urandom"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else \
+            fn.attr if isinstance(fn, ast.Attribute) else ""
+        if name in ("set", "frozenset"):
+            return True
+        # dict-view difference/union etc. still ordered; skip
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitAnd, ast.BitOr, ast.Sub, ast.BitXor)):
+        # set algebra: a & b, a | b, a - b on sets — only flag when one
+        # side is provably a set expression
+        return _is_set_expr(node.left) or _is_set_expr(node.right)
+    return False
+
+
+def _iter_sites(tree: ast.AST):
+    """Yield (iter_expr, lineno, context) for every iteration site."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.For):
+            yield node.iter, node.lineno, "for loop"
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                               ast.DictComp)):
+            for gen in node.generators:
+                yield gen.iter, node.lineno, "comprehension"
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else ""
+            if name in _REDUCERS and node.args:
+                yield node.args[0], node.lineno, f"{name}() reduction"
+            elif name == "list" and node.args:
+                yield node.args[0], node.lineno, "list() materialization"
+
+
+def _json_dumps_feeding_hash(tree: ast.AST):
+    """Yield unsorted json.dumps calls that reach a digest function."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else ""
+        if name not in _HASH_FNS:
+            continue
+        for a in node.args:
+            for arg in ast.walk(a):
+                if (isinstance(arg, ast.Call)
+                        and dotted_name(arg.func) in ("json.dumps", "dumps")):
+                    kw = {k.arg for k in arg.keywords}
+                    if "sort_keys" not in kw:
+                        yield arg.lineno
+
+
+def _host_entropy_calls(tree: ast.AST):
+    sensitive = sensitive_functions(tree)
+    if not sensitive:
+        return
+    owner = owner_map(tree)
+    from ..dataflow import lexical_parents
+    parents = lexical_parents(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = owner.get(node)
+        while fn is not None and fn not in sensitive:
+            fn = parents.get(fn)
+        if fn is None:
+            continue
+        name = dotted_name(node.func) or ""
+        if name.startswith(("jax.random", "jrandom", "jr.")):
+            continue                    # key-threaded PRNG: deterministic
+        if (name.startswith(_HOST_ENTROPY_PREFIXES)
+                or name in _HOST_ENTROPY_EXACT):
+            yield name, node.lineno, getattr(fn, "name", "<lambda>")
+
+
+def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
+    found: list[Finding] = []
+    for it, line, ctx in _iter_sites(tree):
+        if _is_set_expr(it):
+            found.append(Finding(
+                "REPRO-DETERMINISM", path, line,
+                f"{ctx} iterates a set in hash order — feeding trace "
+                "order, cache keys, or manifests from it breaks "
+                "bit-identical resume",
+                "wrap the iterable in sorted(...)"))
+    for line in _json_dumps_feeding_hash(tree):
+        found.append(Finding(
+            "REPRO-DETERMINISM", path, line,
+            "json.dumps without sort_keys=True feeds a digest — the key "
+            "depends on dict insertion order",
+            "pass sort_keys=True to json.dumps"))
+    for name, line, fname in _host_entropy_calls(tree):
+        found.append(Finding(
+            "REPRO-DETERMINISM", path, line,
+            f"host entropy `{name}` inside traced function `{fname}` "
+            "bakes a trace-time value into the compiled computation",
+            "thread a jax.random key (or hoist the read out of the "
+            "traced region)"))
+    return found
+
+
+register(Rule(
+    rule_id="REPRO-DETERMINISM",
+    scope="file",
+    description="no set-order iteration feeding traces/keys/manifests, "
+                "no unsorted json.dumps into digests, no host "
+                "random/time inside traced functions",
+    check=check,
+    fix_hint="sorted(...) the iterable / sort_keys=True / thread a PRNG key",
+))

@@ -6,15 +6,10 @@ a jitted step function forces a device->host transfer per trace (or a
 ConcretizationTypeError), breaking the one-transfer-per-epoch contract the
 fused engines are built on (PR 3).
 
-"Sensitive" functions are found statically, to a fixpoint:
-
-* decorated with ``jit`` / ``jax.jit`` / ``partial(jax.jit, ...)``;
-* passed by name to ``jax.jit``, ``lax.scan``, ``lax.cond``,
-  ``lax.while_loop``, ``lax.fori_loop``, ``lax.switch``, ``jax.vmap``,
-  ``jax.grad``, ``jax.value_and_grad``, ``checkpoint``/``remat``;
-* defined lexically inside a sensitive function (closures: scan bodies are
-  almost always inner defs);
-* called by simple name from a sensitive function.
+"Sensitive" functions come from the shared sensitivity fixpoint in
+``analyze.dataflow`` (jit-decorated, passed to tracer calls, lexically
+nested in or called by name from a sensitive function — see
+:func:`repro.analyze.dataflow.sensitive_functions`).
 
 ``float(<numeric literal>)`` and calls in default-argument position are
 exempt (evaluated at definition time, not in-trace).
@@ -24,21 +19,9 @@ from __future__ import annotations
 import ast
 
 from ..astlint import call_name
+from ..dataflow import lexical_parents, owner_map, sensitive_functions
 from ..findings import Finding
 from ..registry import Rule, register
-
-# call targets that hand a function into a traced context
-_TRACERS = {
-    "jax.jit", "jit", "pjit",
-    "lax.scan", "jax.lax.scan", "scan",
-    "lax.cond", "jax.lax.cond", "cond",
-    "lax.while_loop", "jax.lax.while_loop",
-    "lax.fori_loop", "jax.lax.fori_loop", "fori_loop",
-    "lax.switch", "jax.lax.switch",
-    "jax.vmap", "vmap", "jax.grad", "jax.value_and_grad",
-    "jax.checkpoint", "checkpoint", "jax.remat", "remat",
-    "lax.associative_scan", "jax.lax.associative_scan",
-}
 
 # host-sync call names (module-qualified or bare)
 _SYNC_CALLS = {
@@ -48,89 +31,10 @@ _SYNC_CALLS = {
 _SYNC_METHODS = {"item", "block_until_ready", "tolist", "__array__"}
 
 
-_JIT_NAMES = {"jit", "jax.jit", "pjit"}
-
-
-def _is_jit_decorated(fn: ast.AST) -> bool:
-    for deco in getattr(fn, "decorator_list", []):
-        if isinstance(deco, (ast.Name, ast.Attribute)):
-            if ast.unparse(deco) in _JIT_NAMES:
-                return True
-        elif isinstance(deco, ast.Call):  # @jax.jit(...) / @partial(jax.jit,)
-            head = ast.unparse(deco.func)
-            if head in _JIT_NAMES:
-                return True
-            if (head in ("partial", "functools.partial") and deco.args
-                    and ast.unparse(deco.args[0]) in _JIT_NAMES):
-                return True
-    return False
-
-
-def _func_defs(tree: ast.AST) -> list[ast.AST]:
-    return [n for n in ast.walk(tree)
-            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
-                              ast.Lambda))]
-
-
 def check(tree: ast.AST, source: str, path: str) -> list[Finding]:
-    # annotate lexical parent functions
-    parents: dict[ast.AST, ast.AST] = {}
-    for fn in _func_defs(tree):
-        for child in ast.walk(fn):
-            if child is not fn and isinstance(
-                    child, (ast.FunctionDef, ast.AsyncFunctionDef,
-                            ast.Lambda)):
-                parents.setdefault(child, fn)
-
-    by_name: dict[str, list[ast.AST]] = {}
-    for fn in _func_defs(tree):
-        if hasattr(fn, "name"):
-            by_name.setdefault(fn.name, []).append(fn)
-
-    sensitive: set[ast.AST] = set()
-    for fn in _func_defs(tree):
-        if _is_jit_decorated(fn):
-            sensitive.add(fn)
-    # functions passed (by name or inline lambda) into tracer calls
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.Call) or call_name(node) not in _TRACERS:
-            continue
-        for arg in list(node.args) + [kw.value for kw in node.keywords]:
-            if isinstance(arg, ast.Lambda):
-                sensitive.add(arg)
-            elif isinstance(arg, ast.Name):
-                sensitive.update(by_name.get(arg.id, []))
-
-    # fixpoint: nesting inside a sensitive fn, or being called by name
-    # from one, marks a fn sensitive too
-    changed = True
-    while changed:
-        changed = False
-        for fn in _func_defs(tree):
-            if fn in sensitive:
-                continue
-            p = parents.get(fn)
-            if p is not None and p in sensitive:
-                sensitive.add(fn)
-                changed = True
-        for s in list(sensitive):
-            for node in ast.walk(s):
-                if (node is not s and isinstance(node, ast.Call)
-                        and isinstance(node.func, ast.Name)):
-                    for cand in by_name.get(node.func.id, []):
-                        if cand not in sensitive:
-                            sensitive.add(cand)
-                            changed = True
-
-    # ownership: map each node to its nearest enclosing function.
-    # _func_defs walks breadth-first (outer defs before their inner defs),
-    # so plain assignment lets the innermost function win.
-    owner: dict[ast.AST, ast.AST] = {}
-    for fn in _func_defs(tree):
-        body = fn.body if not isinstance(fn, ast.Lambda) else [fn.body]
-        for stmt in body:
-            for node in ast.walk(stmt):
-                owner[node] = fn
+    parents = lexical_parents(tree)
+    sensitive = sensitive_functions(tree)
+    owner = owner_map(tree)
 
     found: list[Finding] = []
     for node in ast.walk(tree):

@@ -1,0 +1,384 @@
+"""REPRO-PALLAS-*: static audit of the Pallas kernel packages.
+
+Each package under ``src/repro/kernels/<name>/`` couples a ``kernel.py``
+(the ``pl.pallas_call`` grids/BlockSpecs and kernel bodies) with an
+``ops.py`` (the jitted wrappers that pad operands). Four checks, all
+pure-AST over the package's files (never importing jax):
+
+* **REPRO-PALLAS-GRID** — every ``X // B`` in a ``grid=`` must be backed
+  by divisibility evidence for ``X`` w.r.t. ``B`` somewhere in the
+  package: the ceil-div pad idiom ``X = -(-d // B) * B`` or an
+  ``assert X % B == 0``. A non-divisible grid silently truncates the
+  trailing tile.
+* **REPRO-PALLAS-OOB** — provable out-of-bounds ref indexing: an integer
+  literal row index (direct subscript, ``pl.load``/``pl.store``, or a
+  ``range(k)`` loop/comprehension bound) that reaches or exceeds the
+  literal leading BlockSpec extent. Symbolic shapes are skipped — the
+  rule only reports what it can prove.
+* **REPRO-PALLAS-ACC** — accumulation dtype: MXU contractions
+  (``dot_general``/``pl.dot``/``jnp.dot``/``einsum``) must pin
+  ``preferred_element_type`` (f32 accumulators for f32-or-wider inputs),
+  and ``o_ref[...] += ...`` accumulation requires an f32 (or wider)
+  ``out_shape`` dtype — accumulating in bf16/f16 loses low bits per
+  grid step.
+* **REPRO-PALLAS-MASK** — packages whose kernels run a bitonic
+  compare-exchange network must map NaN payloads and padding lanes to
+  the finite ``_BIG`` sentinel before the network (cf.
+  ``agg/rules.py::sort_stack``): NaN poisons ``jnp.minimum``/``maximum``
+  compare-exchanges and +/-inf pads break windowed arithmetic, so the
+  pad site needs an ``isnan``->sentinel rewrite with a finite
+  ``_BIG``-style constant.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from ..findings import Finding
+from ..registry import Rule, register
+
+_KERNELS_DIR = os.path.join("src", "repro", "kernels")
+_DOT_CALLS = {"dot_general", "dot", "einsum"}
+_BIG_MIN = 1e38          # finite sentinel magnitude (f32 max is ~3.4e38)
+
+
+def _packages(root: str):
+    """Yield (pkg_rel_dir, {filename: (tree, source)}) per kernel package."""
+    base = os.path.join(root, _KERNELS_DIR)
+    if not os.path.isdir(base):
+        return
+    for d in sorted(os.listdir(base)):
+        pdir = os.path.join(base, d)
+        if not os.path.isfile(os.path.join(pdir, "kernel.py")):
+            continue
+        files = {}
+        for fn in sorted(os.listdir(pdir)):
+            if fn.endswith(".py"):
+                with open(os.path.join(pdir, fn)) as f:
+                    src = f.read()
+                try:
+                    files[fn] = (ast.parse(src), src)
+                except SyntaxError:
+                    continue            # REPRO-PARSE reports it
+        yield os.path.join(_KERNELS_DIR, d), files
+
+
+def _call_tail(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _pallas_calls(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_tail(node) == "pallas_call":
+            yield node
+
+
+def _kw(call: ast.Call, name: str):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+# -- GRID -------------------------------------------------------------------
+
+
+_CEIL_DIV = r"^-\(-\w+\s*//\s*{b}\)\s*\*\s*{b}$"
+
+
+def _has_divisibility_evidence(files: dict, x: str, b: str) -> bool:
+    pat = re.compile(_CEIL_DIV.format(b=re.escape(b)))
+    for tree, _src in files.values():
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == x
+                    and pat.match(ast.unparse(node.value).replace(" ", ""))):
+                return True
+            if isinstance(node, ast.Assert):
+                t = ast.unparse(node.test).replace(" ", "")
+                if f"{x}%{b}==0" in t:
+                    return True
+    return False
+
+
+def _grid_divs(tree: ast.Module, call: ast.Call):
+    """FloorDiv (X, B) name pairs reachable from the call's grid kwarg."""
+    grid = _kw(call, "grid")
+    if grid is None:
+        return
+    exprs = [grid]
+    names = {n.id for n in ast.walk(grid) if isinstance(n, ast.Name)}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id in names):
+            exprs.append(node.value)
+    for e in exprs:
+        for node in ast.walk(e):
+            if (isinstance(node, ast.BinOp)
+                    and isinstance(node.op, ast.FloorDiv)
+                    and isinstance(node.left, ast.Name)
+                    and isinstance(node.right, ast.Name)):
+                yield node.left.id, node.right.id, node.lineno
+
+
+def _check_grid(pkg: str, files: dict) -> list[Finding]:
+    found = []
+    for fn, (tree, _src) in files.items():
+        rel = os.path.join(pkg, fn)
+        for call in _pallas_calls(tree):
+            for x, b, line in _grid_divs(tree, call):
+                if not _has_divisibility_evidence(files, x, b):
+                    found.append(Finding(
+                        "REPRO-PALLAS-GRID", rel, line,
+                        f"grid uses `{x} // {b}` but the package shows no "
+                        f"divisibility evidence for `{x}` (ceil-div pad or "
+                        f"`assert {x} % {b} == 0`) — a ragged trailing tile "
+                        "is silently dropped",
+                        f"pad with `{x} = -(-d // {b}) * {b}` in the ops "
+                        "wrapper (see kernels/*/ops.py)"))
+    return found
+
+
+# -- OOB --------------------------------------------------------------------
+
+
+def _literal_leading_dims(tree: ast.Module) -> list[int]:
+    dims = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_tail(node) == "BlockSpec":
+            shape = node.args[0] if node.args else _kw(node, "block_shape")
+            if isinstance(shape, (ast.Tuple, ast.List)) and shape.elts:
+                lead = shape.elts[0]
+                if isinstance(lead, ast.Constant) and \
+                        isinstance(lead.value, int):
+                    dims.append(lead.value)
+    return dims
+
+
+def _check_oob(pkg: str, files: dict) -> list[Finding]:
+    found = []
+    for fn, (tree, _src) in files.items():
+        if fn != "kernel.py":
+            continue
+        rel = os.path.join(pkg, fn)
+        dims = _literal_leading_dims(tree)
+        if not dims:
+            continue                    # symbolic shapes: nothing provable
+        bound = max(dims)
+
+        def idx_of(node):
+            if isinstance(node, ast.Subscript):
+                base = node.value
+                sl = node.slice
+                head = sl.elts[0] if isinstance(sl, ast.Tuple) and sl.elts \
+                    else sl
+                if (isinstance(base, ast.Name) and base.id.endswith("_ref")
+                        and isinstance(head, ast.Constant)
+                        and isinstance(head.value, int)):
+                    return head.value
+            if isinstance(node, ast.Call) and \
+                    _call_tail(node) in ("load", "store") and len(node.args) > 1:
+                sl = node.args[1]
+                head = sl.elts[0] if isinstance(sl, ast.Tuple) and sl.elts \
+                    else sl
+                if isinstance(head, ast.Constant) and \
+                        isinstance(head.value, int):
+                    return head.value
+            return None
+
+        # range(k) bounds whose loop var indexes a ref
+        range_bounds = {}
+        for node in ast.walk(tree):
+            it = None
+            tgt = None
+            if isinstance(node, ast.For):
+                it, tgt = node.iter, node.target
+            elif isinstance(node, ast.comprehension):
+                it, tgt = node.iter, node.target
+            if (it is not None and isinstance(it, ast.Call)
+                    and _call_tail(it) == "range" and len(it.args) == 1
+                    and isinstance(it.args[0], ast.Constant)
+                    and isinstance(tgt, ast.Name)):
+                range_bounds[tgt.id] = (it.args[0].value, it.lineno)
+
+        for node in ast.walk(tree):
+            k = idx_of(node)
+            if k is not None and k >= bound:
+                found.append(Finding(
+                    "REPRO-PALLAS-OOB", rel, node.lineno,
+                    f"ref index {k} is out of bounds for the largest "
+                    f"declared BlockSpec leading extent {bound}",
+                    "index within the block shape; pad the operand if the "
+                    "logical shape is larger"))
+            if (isinstance(node, ast.Subscript)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id.endswith("_ref")):
+                sl = node.slice
+                head = sl.elts[0] if isinstance(sl, ast.Tuple) and sl.elts \
+                    else sl
+                if isinstance(head, ast.Name) and head.id in range_bounds:
+                    rb, rline = range_bounds[head.id]
+                    if rb > bound:
+                        found.append(Finding(
+                            "REPRO-PALLAS-OOB", rel, node.lineno,
+                            f"loop over range({rb}) (line {rline}) indexes "
+                            f"a ref whose largest BlockSpec leading extent "
+                            f"is {bound}",
+                            "bound the loop by the block shape"))
+    return found
+
+
+# -- ACC --------------------------------------------------------------------
+
+
+_NARROW_DTYPES = ("bfloat16", "float16")
+
+
+def _out_dtype_names(tree: ast.Module) -> set[str]:
+    out = set()
+    for call in _pallas_calls(tree):
+        shape = _kw(call, "out_shape")
+        if shape is None:
+            continue
+        for node in ast.walk(shape):
+            if isinstance(node, ast.Call) and \
+                    _call_tail(node) == "ShapeDtypeStruct" and \
+                    len(node.args) >= 2:
+                dt = node.args[1]
+                name = ast.unparse(dt)
+                out.add(name.split(".")[-1])
+    return out
+
+
+def _check_acc(pkg: str, files: dict) -> list[Finding]:
+    found = []
+    for fn, (tree, _src) in files.items():
+        if fn != "kernel.py":
+            continue
+        rel = os.path.join(pkg, fn)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _call_tail(node) in _DOT_CALLS:
+                if _kw(node, "preferred_element_type") is None:
+                    found.append(Finding(
+                        "REPRO-PALLAS-ACC", rel, node.lineno,
+                        f"`{_call_tail(node)}` without "
+                        "`preferred_element_type` — the MXU accumulates in "
+                        "the input dtype (bf16 partials for bf16 inputs)",
+                        "pass preferred_element_type=jnp.float32"))
+        narrow = {d for d in _out_dtype_names(tree) if d in _NARROW_DTYPES}
+        if narrow:
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.AugAssign)
+                        and isinstance(node.op, ast.Add)
+                        and isinstance(node.target, ast.Subscript)
+                        and isinstance(node.target.value, ast.Name)
+                        and node.target.value.id.endswith("_ref")):
+                    found.append(Finding(
+                        "REPRO-PALLAS-ACC", rel, node.lineno,
+                        f"`+=` accumulation into a {'/'.join(sorted(narrow))} "
+                        "output ref loses low bits every grid step",
+                        "accumulate in an f32 VMEM scratch (or f32 "
+                        "out_shape) and cast once at the end"))
+    return found
+
+
+# -- MASK -------------------------------------------------------------------
+
+
+def _has_big_sentinel(files: dict) -> bool:
+    for tree, src in files.values():
+        if "isnan" not in src:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Constant) and \
+                    isinstance(node.value, float) and \
+                    abs(node.value) >= _BIG_MIN:
+                return True
+            if isinstance(node, ast.Name) and "BIG" in node.id:
+                return True
+            if isinstance(node, ast.Attribute) and "BIG" in node.attr:
+                return True
+    return False
+
+
+def _pad_site(files: dict):
+    for fn, (tree, _src) in files.items():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    _call_tail(node) in ("full", "pad", "full_like"):
+                return fn, node.lineno
+    return "kernel.py", 0
+
+
+def _check_mask(pkg: str, files: dict) -> list[Finding]:
+    ktree, ksrc = files.get("kernel.py", (None, ""))
+    if "bitonic" not in ksrc:
+        return []
+    if _has_big_sentinel(files):
+        return []
+    fn, line = _pad_site(files)
+    return [Finding(
+        "REPRO-PALLAS-MASK", os.path.join(pkg, fn), line,
+        "bitonic compare-exchange kernels without a NaN->sentinel rewrite "
+        "at the pad site: NaN payloads poison jnp.minimum/maximum networks "
+        "and +/-inf pads break windowed arithmetic",
+        "map NaN (and padding lanes) to the finite `_BIG` sentinel before "
+        "the network, as agg/rules.py::sort_stack does")]
+
+
+# -- registration -----------------------------------------------------------
+
+
+def _make_check(fn):
+    def check(root: str) -> list[Finding]:
+        found = []
+        for pkg, files in _packages(root):
+            found.extend(fn(pkg, files))
+        return found
+    return check
+
+
+register(Rule(
+    rule_id="REPRO-PALLAS-GRID",
+    scope="repo",
+    description="every `X // B` in a pallas_call grid has package-local "
+                "divisibility evidence (ceil-div pad idiom or assert)",
+    check=_make_check(_check_grid),
+    fix_hint="pad the operand to a multiple of the block in ops.py",
+))
+
+register(Rule(
+    rule_id="REPRO-PALLAS-OOB",
+    scope="repo",
+    description="no provable out-of-bounds ref indexing vs declared "
+                "BlockSpec extents (literal indices and range() bounds)",
+    check=_make_check(_check_oob),
+    fix_hint="index within the block shape",
+))
+
+register(Rule(
+    rule_id="REPRO-PALLAS-ACC",
+    scope="repo",
+    description="MXU contractions pin `preferred_element_type`; no `+=` "
+                "accumulation into bf16/f16 output refs",
+    check=_make_check(_check_acc),
+    fix_hint="accumulate in f32 (preferred_element_type / VMEM scratch)",
+))
+
+register(Rule(
+    rule_id="REPRO-PALLAS-MASK",
+    scope="repo",
+    description="bitonic sorting-network packages rewrite NaN/padding "
+                "lanes to the finite `_BIG` sentinel before "
+                "compare-exchange",
+    check=_make_check(_check_mask),
+    fix_hint="map NaN and pads to `_BIG` at the pad site (sort_stack idiom)",
+))

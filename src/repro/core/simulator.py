@@ -340,6 +340,10 @@ class ByzSGDSimulator:
         gnorm = tree_gnorm(_tree_take(new_wg, 0))
         anchor_eta = jnp.where(state.t % cfg.T == 0, eta, state.anchor_eta)
         anchor_gnorm = jnp.where(state.t % cfg.T == 0, gnorm, state.anchor_gnorm)
+        # Algorithm 3 guards worker pulls with the Lipschitz + Outliers
+        # filters (paper Sec. 4.2), not a GAR — the while_loop above IS
+        # the sanitizer for the w_model write:
+        # analyze: ignore[REPRO-TAINT-BYZ] Alg. 3 Lipschitz+Outliers filters guard this pull
         new_state = state._replace(params=new_params, t=state.t + 1, key=key,
                                    w_model=new_wm, w_grad=new_wg, lip=new_lip,
                                    anchor_eta=anchor_eta,

@@ -17,6 +17,7 @@ from .kernel import (meamed_pallas_call, median_pallas_call,
                      trimmed_mean_pallas_call)
 
 _LANE = 128
+_BIG = 3.4e38  # finite sentinel (f32 max ~3.4e38): NaN/pad lanes sort last
 
 
 def _default_interpret() -> bool:
@@ -24,8 +25,13 @@ def _default_interpret() -> bool:
 
 
 def _tile(x: jax.Array, block_d: int):
-    """Pad the stack to (next-pow2 rows of +inf, lane-aligned d) for the
-    sorting-network kernels; pads sort last."""
+    """Pad the stack to (next-pow2 rows of ``_BIG``, lane-aligned d) for
+    the sorting-network kernels; pads sort last. NaN payloads are mapped
+    to ``_BIG`` too — NaN poisons the jnp.minimum/maximum
+    compare-exchanges (every comparison involving it is False, so it
+    drifts arbitrarily instead of sorting last), and a Byzantine replica
+    sending NaN would otherwise corrupt the whole coordinate. Mirrors
+    ``agg.rules.sort_stack``."""
     n, d = x.shape
     if n > 64:
         raise ValueError("cwise order-statistic kernels are sized for "
@@ -36,8 +42,10 @@ def _tile(x: jax.Array, block_d: int):
     block_d = min(block_d, -(-d // _LANE) * _LANE)
     block_d = -(-block_d // _LANE) * _LANE
     d_pad = -(-d // block_d) * block_d
-    xp = jnp.full((n_pow2, d_pad), jnp.inf, jnp.float32)
-    xp = xp.at[:n, :d].set(x.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    xf = jnp.where(jnp.isnan(xf), jnp.float32(_BIG), xf)
+    xp = jnp.full((n_pow2, d_pad), jnp.float32(_BIG), jnp.float32)
+    xp = xp.at[:n, :d].set(xf)
     return xp, n_pow2, d_pad, block_d
 
 
