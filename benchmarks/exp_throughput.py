@@ -20,6 +20,12 @@ their modeled per-step cross-'rep' collective volume attached) — so the
 multi-device path's steps/sec rides the same perf-trajectory file as the
 single-host engine.
 
+The ``model/lm/*`` lanes time one zoo model family each (dense transformer /
+MoE / RWKV6) through the protocol runner's engine construction — token
+stream, activation-sharding rules, fsdp-aware modeled collective volume —
+so every trainable family has a committed steps/sec number the 25%
+regression gate watches.
+
 Wall-clock is measured with ``block_until_ready`` around interleaved
 best-of-``repeats`` trials (this container's CPU throttles erratically;
 interleaving + best-of keeps the *ratios* meaningful), and compile time is
@@ -49,6 +55,12 @@ BATCH = 25
 T = 10
 ACCEPTANCE_KEY = "async/mlp_h64"   # default MLP problem, async, T=10
 ACCEPTANCE_TARGET = 5.0
+#: one protocol-runner lane per trainable model family (dense transformer /
+#: MoE / RWKV6 SSM), riding the registered lm/* presets; transformer steps
+#: are ~100x an MLP step on this backend, so they time far fewer of them
+LM_PRESETS = ("lm/tfm_tiny", "lm/moe_tiny", "lm/rwkv_tiny")
+LM_STEPS = 12
+LM_EPOCH_STEPS = 6
 
 
 def _build(variant: str, hidden: int):
@@ -131,6 +143,54 @@ def _protocol_lane(hidden: int, steps: int, epoch_steps: int, engine: str):
     return compile_s, one_run, proto.collective_volume_bytes(pcfg, n_params)
 
 
+def _model_lane(preset: str, steps: int, epoch_steps: int):
+    """(compile_s, trial_fn, volume_bytes, family) for one zoo model family
+    through ``ProtocolEngine`` fused epochs — the same engine construction
+    as ``repro.exp.runners._run_protocol`` (token stream, activation-
+    sharding rules from the launch layer), minus the metrics plumbing."""
+    from repro.core import protocol as proto
+    from repro.data.pipeline import DeviceTokenStream
+    from repro.exp import presets, runners
+    from repro.exp.spec import DATA
+    from repro.launch.mesh import use_mesh
+    from repro.launch.steps import train_rules
+
+    e = presets.get(preset)
+    pcfg = e.to_protocol_config()
+    G = pcfg.n_groups
+    bundle = e.build_bundle()
+    mesh = runners._protocol_mesh(G)
+    K = dict(zip(mesh.axis_names, mesh.devices.shape))["fsdp"]
+    rules = train_rules(mesh, bundle.cfg)
+    n_params = sum(l.size for l in jax.tree.leaves(
+        jax.eval_shape(bundle.init, jax.random.PRNGKey(0))))
+
+    with use_mesh(mesh):
+        eng = proto.ProtocolEngine(bundle, pcfg, e.build_schedule(),
+                                   mesh=mesh, rules=rules)
+
+    def one_run():
+        with use_mesh(mesh):
+            state = eng.init_state(jax.random.PRNGKey(0))
+            stream = DeviceTokenStream(e.seed, DATA[e.data], G, e.batch)
+            t0 = time.time()
+            state, _ = eng.run(state, stream=stream, steps=steps,
+                               epoch_steps=epoch_steps)
+            jax.block_until_ready(state.params)
+            return steps / (time.time() - t0)
+
+    with use_mesh(mesh):
+        state = eng.init_state(jax.random.PRNGKey(0))
+        stream = DeviceTokenStream(e.seed, DATA[e.data], G, e.batch)
+        t0 = time.time()
+        state, _ = eng.run(state, stream=stream, steps=epoch_steps,
+                           epoch_steps=epoch_steps)
+        jax.block_until_ready(state.params)
+        compile_s = time.time() - t0
+    vol = proto.collective_volume_bytes(pcfg, n_params, fsdp=K)
+    return compile_s, one_run, vol, bundle.cfg.family
+
+
 def _fused_lane(variant: str, hidden: int, steps: int, epoch_steps: int):
     cfg, sim = _build(variant, hidden)
     eng = EpochEngine(sim)
@@ -205,6 +265,29 @@ def run(quick: bool = True):
                                          entry["seed_loop"]["steps_per_s"])
         out["lanes"][key] = entry
 
+    # model-family lanes: the zoo through the protocol runner, one lane per
+    # family, interleaved best-of like the MLP lanes (fewer, pricier steps)
+    lm_fns, lm_meta = {}, {}
+    for preset in LM_PRESETS:
+        key = f"model/{preset}"
+        compile_s, fn, vol, family = _model_lane(preset, LM_STEPS,
+                                                 LM_EPOCH_STEPS)
+        lm_fns[key] = fn
+        lm_meta[key] = {"compile_s": compile_s,
+                        "collective_bytes_per_step": vol, "family": family}
+    lm_trials = {key: [] for key in lm_fns}
+    for _ in range(repeats):
+        for key, fn in lm_fns.items():
+            lm_trials[key].append(fn())
+    for key, v in lm_trials.items():
+        meta = lm_meta[key]
+        out["lanes"][key] = {
+            "family": meta["family"], "steps": LM_STEPS,
+            "protocol": {"steps_per_s": max(v), "trials": v,
+                         "compile_s": meta["compile_s"],
+                         "collective_bytes_per_step":
+                             meta["collective_bytes_per_step"]}}
+
     pl = out["lanes"][ACCEPTANCE_KEY]
     out["protocol"] = {
         "config": ACCEPTANCE_KEY, "n_groups": 5,
@@ -239,6 +322,13 @@ def summarize(res: dict) -> str:
              f"({res['device']}, {res['steps']} steps, batch {res['batch']}, "
              f"T={res['T']}, best of {res['repeats']}):"]
     for key, e in res["lanes"].items():
+        if "fused" not in e:  # model-family lane: protocol runner only
+            p = e["protocol"]
+            lines.append(
+                f"  {key:15s}: protocol {p['steps_per_s']:7.2f} steps/s  "
+                f"({e['family']}; compile {p['compile_s']:.1f}s; modeled "
+                f"{p['collective_bytes_per_step']/1e6:.2f} MB/step)")
+            continue
         lines.append(
             f"  {key:15s}: seed_loop {e['seed_loop']['steps_per_s']:7.1f}  "
             f"stepwise {e['stepwise']['steps_per_s']:7.1f}  "
@@ -264,18 +354,21 @@ def summarize(res: dict) -> str:
 
 
 def compare(new: dict, baseline: dict, tol: float = 0.25) -> list[str]:
-    """Regressions of fused steps/sec vs a baseline run. A lane regresses when
-    it is more than ``tol`` slower than the committed number."""
+    """Regressions of steps/sec vs a baseline run. Each lane gates on its
+    timed engine — ``fused`` for the MLP lanes, ``protocol`` for the
+    model-family lanes — and regresses when more than ``tol`` slower than
+    the committed number."""
     problems = []
     for key, old in baseline.get("lanes", {}).items():
+        gate = "fused" if "fused" in old else "protocol"
         cur = new.get("lanes", {}).get(key)
-        if cur is None:
+        if cur is None or gate not in cur:
             problems.append(f"{key}: lane missing from this run")
             continue
-        old_sps = old["fused"]["steps_per_s"]
-        new_sps = cur["fused"]["steps_per_s"]
+        old_sps = old[gate]["steps_per_s"]
+        new_sps = cur[gate]["steps_per_s"]
         if new_sps < (1.0 - tol) * old_sps:
-            problems.append(f"{key}: fused {new_sps:.1f} steps/s vs baseline "
+            problems.append(f"{key}: {gate} {new_sps:.1f} steps/s vs baseline "
                             f"{old_sps:.1f} (-{100*(1-new_sps/old_sps):.0f}%, "
                             f"tolerance {100*tol:.0f}%)")
     return problems

@@ -1,8 +1,14 @@
-"""End-to-end distributed ByzSGD LM training (the launch/train.py driver).
+"""End-to-end distributed ByzSGD LM training.
 
 Trains a transformer with the full distributed protocol — per-group replicas,
-masked-Median pulls, MDA aggregation, DMC gathers, checkpoint/restart — on 8
-forced host devices (stand-ins for pod slices).
+masked-Median pulls, MDA aggregation, DMC gathers — on 8 forced host devices
+(stand-ins for pod slices).
+
+``--scale tiny`` runs the registered ``lm/tfm_tiny`` experiment preset
+through :func:`repro.exp.run`: the protocol runner lights up the 2D
+``(rep=4, fsdp=2)`` mesh and reports the "acc" metric (negative eval loss,
+higher is better). ``--scale 100m`` drives the production launcher
+(``repro.launch.train``) with checkpoint/restart at a production-ish width.
 
   # tiny model (fast demo)
   PYTHONPATH=src python examples/train_lm_distributed.py
@@ -12,11 +18,8 @@ forced host devices (stand-ins for pod slices).
 """
 import argparse
 import os
-import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
-
-sys.argv0 = sys.argv[0]
 
 
 def main():
@@ -27,25 +30,35 @@ def main():
                     help="e.g. alie (worker attack to inject)")
     args = ap.parse_args()
 
+    if args.scale == "tiny":
+        from repro import exp
+        overrides = {"steps": args.steps}
+        if args.attack:
+            from repro.core.attacks import ByzantineSpec
+            overrides["byz"] = ByzantineSpec(
+                worker_attack=args.attack, n_byz_workers=1, equivocate=True)
+        res = exp.run("lm/tfm_tiny", **overrides)
+        print(f"[train_lm] lm/tfm_tiny mesh={res.provenance['mesh']} "
+              f"steps={args.steps} final neg-eval-loss "
+              f"{res.final['acc']:.3f}")
+        return
+
     from repro.launch import train as train_mod
 
+    # ~100M: reduced topology but production-ish width
     argv = ["--arch", "phi4-mini-3.8b", "--steps", str(args.steps),
             "--mesh", "4x2", "--groups", "4", "--T", "10",
-            "--ckpt-dir", "/tmp/byzsgd_ckpt", "--ckpt-every", "25"]
-    if args.scale == "tiny":
-        argv += ["--reduced", "--seq", "64", "--batch-per-group", "4"]
-    else:
-        # ~100M: reduced topology but production-ish width
-        argv += ["--reduced", "--seq", "256", "--batch-per-group", "4"]
-        from repro.models import registry
-        orig = registry.get_bundle
+            "--ckpt-dir", "/tmp/byzsgd_ckpt", "--ckpt-every", "25",
+            "--reduced", "--seq", "256", "--batch-per-group", "4"]
+    from repro.models import registry
+    orig = registry.get_bundle
 
-        def patched(arch_id, reduced=False, depth=None, **kw):
-            return orig(arch_id, reduced=reduced, depth=depth,
-                        n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
-                        d_ff=3072, vocab=8192, head_dim=64, **kw)
+    def patched(arch_id, reduced=False, depth=None, **kw):
+        return orig(arch_id, reduced=reduced, depth=depth,
+                    n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+                    d_ff=3072, vocab=8192, head_dim=64, **kw)
 
-        registry.get_bundle = patched
+    registry.get_bundle = patched
     if args.attack:
         argv += ["--worker-attack", args.attack, "--n-byz", "1"]
     train_mod.main(argv)

@@ -20,7 +20,10 @@ audits the artifacts:
   exchange bytes must match ring-model traffic measured from the compiled
   HLO of the exchange primitives (``masked_pull`` + ``aggregate_gradients``)
   within 10%, for BOTH collective engines. This audit is how the original
-  "sharded moves ~2·P" model was caught being 4x off.
+  "sharded moves ~2·P" model was caught being 4x off. On >= 8 devices the
+  donation/transfer/collective rules each add a 2D lane (G=4 -> mesh
+  (rep=4, fsdp=2)): donation must survive the per-leaf fsdp layouts and
+  the model's ``fsdp=K`` term must match the fsdp-sharded exchange.
 
 Rules run meaningfully only on a multi-device mesh: the CLI's ``--hlo``
 flag forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before
@@ -38,6 +41,9 @@ _PRESET = "smoke"
 _MIN_DEVICES = 5
 _COLLECTIVE_RTOL = 0.10
 _HLO = "<hlo-audit>"        # findings are about artifacts, not one file
+#: overrides that drop the smoke preset to G=4 so ``make_protocol_mesh``
+#: lights up the 'fsdp' axis on the forced-8-device lane: (rep=4, fsdp=2)
+_2D_OVERRIDES = dict(n_workers=4, f_workers=1, n_servers=4, f_servers=0)
 
 
 def _device_guard(rule_id: str) -> list[Finding]:
@@ -150,13 +156,23 @@ def check_donation(root) -> list[Finding]:
     n_state = len(jax.tree.leaves(state))
     audit("fused epoch", "src/repro/core/engine.py",
           _epoch_compiled_text(eng, state, stream), range(n_state))
-    for engine in ("naive", "sharded"):
+    lanes = [("naive", {}), ("sharded", {})]
+    if jax.device_count() >= 8:
+        # the 2D lane: G=4 lights up (rep=4, fsdp=2) — donation must
+        # survive the per-leaf fsdp layouts too
+        lanes.append(("sharded[rep,fsdp]", _2D_OVERRIDES))
+    for label, overrides in lanes:
         from ..launch.mesh import use_mesh
-        _, _, mesh, peng, pstate, pstream = _protocol_engine(engine)
+        engine = label.split("[", 1)[0]
+        _, _, mesh, peng, pstate, pstream = _protocol_engine(
+            engine, **overrides)
+        if overrides:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            assert sizes["fsdp"] > 1, sizes
         n_state = len(jax.tree.leaves(pstate))
         with use_mesh(mesh):
             txt = _epoch_compiled_text(peng, pstate, pstream)
-        audit(f"protocol[{engine}] epoch", "src/repro/core/protocol.py",
+        audit(f"protocol[{label}] epoch", "src/repro/core/protocol.py",
               txt, range(n_state))
 
     # serve decode: the [R, n_slots, ...] cache stack is donated (arg 1)
@@ -227,6 +243,11 @@ def check_host_transfers(root) -> list[Finding]:
     _, _, mesh, peng, pstate, pstream = _protocol_engine("sharded")
     audit("protocol[sharded]", "src/repro/core/protocol.py",
           peng, pstate, pstream, 6, mesh=mesh)
+    if jax.device_count() >= 8:
+        _, _, mesh, peng, pstate, pstream = _protocol_engine(
+            "sharded", **_2D_OVERRIDES)
+        audit("protocol[sharded, rep x fsdp]", "src/repro/core/protocol.py",
+              peng, pstate, pstream, 6, mesh=mesh)
     return found
 
 
@@ -293,7 +314,7 @@ def check_recompiles(root) -> list[Finding]:
 # ---------------------------------------------------------------------------
 
 
-def measure_exchange_bytes(engine: str):
+def measure_exchange_bytes(engine: str, *, two_d: bool = False):
     """Ring-model bytes/device of the compiled exchange primitives vs the
     ``collective_volume_bytes`` model: (measured, modeled, n_params).
 
@@ -301,7 +322,9 @@ def measure_exchange_bytes(engine: str):
     ``aggregate_gradients`` (the weighted push) on a rep-sharded ``[G, ...]``
     parameter stack with replicated masks/weights — the exchange pattern of
     one scatter step, minus the distance/Gram traffic that the model
-    deliberately excludes."""
+    deliberately excludes. With ``two_d`` the stack is additionally
+    fsdp-sharded per the engine's own leaf-layout table (G=4 on 8 devices
+    -> mesh (rep=4, fsdp=2)) and the model gets ``fsdp=K``."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding
@@ -312,18 +335,29 @@ def measure_exchange_bytes(engine: str):
     from ..launch import hlo_analysis
     from ..launch.mesh import make_protocol_mesh, use_mesh
 
-    e = presets.get(_PRESET, runner="protocol", protocol_engine=engine)
+    e = presets.get(_PRESET, runner="protocol", protocol_engine=engine,
+                    **(_2D_OVERRIDES if two_d else {}))
     pcfg = e.to_protocol_config()
     G = pcfg.n_groups
     init_fn, _, _ = e.build_problem()
     p0 = init_fn(jax.random.PRNGKey(0))
     n_params = sum(l.size for l in jax.tree.leaves(p0))
     mesh = make_protocol_mesh(G)
-    rep = NamedSharding(mesh, P("rep"))
+    K = dict(zip(mesh.axis_names, mesh.devices.shape))["fsdp"]
+    if two_d and K <= 1:
+        raise RuntimeError(
+            f"2D exchange audit needs an fsdp>1 mesh, got {K} "
+            f"(G={G} on {jax.device_count()} devices)")
     repl = NamedSharding(mesh, P())
-    params = jax.tree.map(
-        lambda l: jax.device_put(jnp.broadcast_to(l, (G,) + l.shape), rep),
-        p0)
+    stacked = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (G,) + l.shape), p0)
+    if two_d:
+        shardings = _protocol._named_tree_shardings(
+            jax.eval_shape(lambda: stacked), mesh)
+    else:
+        shardings = jax.tree.map(
+            lambda l: NamedSharding(mesh, P("rep")), stacked)
+    params = jax.tree.map(jax.device_put, stacked, shardings)
     masks = jax.device_put(jnp.ones((G, G), bool), repl)
     weights = jax.device_put(jnp.full((G, G), 1.0 / G, jnp.float32), repl)
 
@@ -336,20 +370,27 @@ def measure_exchange_bytes(engine: str):
                  push.lower(params, weights).compile().as_text()]
     measured = sum(
         hlo_analysis.collective_traffic(t, G).bytes_per_device for t in texts)
-    return measured, _protocol.collective_volume_bytes(pcfg, n_params), \
-        n_params
+    return measured, _protocol.collective_volume_bytes(
+        pcfg, n_params, fsdp=K), n_params
 
 
 def check_collectives(root) -> list[Finding]:
+    import jax
     found = _device_guard("REPRO-HLO-COLLECTIVES")
     if found:
         return found
-    for engine in ("naive", "sharded"):
-        measured, modeled, n_params = measure_exchange_bytes(engine)
+    # the 2D lane needs a full (rep=4, fsdp=2) split, i.e. >= 8 devices
+    lanes = [("naive", False), ("sharded", False)]
+    if jax.device_count() >= 8:
+        lanes += [("naive", True), ("sharded", True)]
+    for engine, two_d in lanes:
+        label = f"{engine}[rep,fsdp]" if two_d else engine
+        measured, modeled, n_params = measure_exchange_bytes(
+            engine, two_d=two_d)
         if measured <= 0:
             found.append(Finding(
                 "REPRO-HLO-COLLECTIVES", "src/repro/core/protocol.py", 0,
-                f"{engine}: no collectives found in the compiled exchange "
+                f"{label}: no collectives found in the compiled exchange "
                 "primitives (mesh not applied?)",
                 "audit must run on a multi-device 'rep' mesh"))
             continue
@@ -357,7 +398,7 @@ def check_collectives(root) -> list[Finding]:
         if err > _COLLECTIVE_RTOL:
             found.append(Finding(
                 "REPRO-HLO-COLLECTIVES", "src/repro/core/protocol.py", 0,
-                f"{engine}: modeled exchange {modeled}B vs HLO ring-model "
+                f"{label}: modeled exchange {modeled}B vs HLO ring-model "
                 f"{measured:.0f}B ({err:.0%} off, P={n_params}, tol "
                 f"{_COLLECTIVE_RTOL:.0%})",
                 "re-derive collective_volume_bytes from the compiled "
@@ -368,7 +409,8 @@ def check_collectives(root) -> list[Finding]:
 for _rule in (
     Rule("REPRO-HLO-COLLECTIVES", "hlo",
          "`collective_volume_bytes` model within 10% of ring-model bytes "
-         "measured from compiled exchange-primitive HLO, both engines",
+         "measured from compiled exchange-primitive HLO, both engines, "
+         "1D and (rep x fsdp) 2D lanes",
          check_collectives,
          "fix the model to match the artifact"),
     Rule("REPRO-HLO-DONATION", "hlo",

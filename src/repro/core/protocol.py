@@ -78,6 +78,8 @@ class ProtocolConfig:
                                   # aggregation = weights over 'rep')
     pull_gar: str = "median"      # model rule for the masked worker pull
     gather_gar: str = "median"    # model rule for the DMC gather
+    optimizer: str = "sgd"        # repro.optim registry ref for the local
+                                  # update (per-replica state in ByzState.opt)
     exchange_dtype: str = "float32"
     mda_exact_limit: int = 200_000
     chunk_bytes: int = 256 * 2**20   # stream leaves bigger than this over dim 1
@@ -106,6 +108,10 @@ class ProtocolConfig:
                                  f"coordinate-wise rule with traced-mask "
                                  f"support; have {ok}")
             pspec.validate(self.q_servers, self.f_servers)
+        from .. import optim as _optim
+        if self.optimizer not in _optim.OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                             f"have {sorted(_optim.OPTIMIZERS)}")
 
     @staticmethod
     def derive(R: int, divisor: int = 1, *, T: int = 50, engine: str = "sharded",
@@ -114,7 +120,7 @@ class ProtocolConfig:
                f_workers: int | None = None, f_servers: int | None = None,
                q_workers: int | None = None, q_servers: int | None = None,
                gar: str = "mda", pull_gar: str = "median",
-               gather_gar: str = "median",
+               gather_gar: str = "median", optimizer: str = "sgd",
                mda_exact_limit: int = 200_000) -> "ProtocolConfig":
         """Resilience parameters for G = R // divisor groups.
 
@@ -134,7 +140,7 @@ class ProtocolConfig:
                               exchange_dtype=exchange_dtype,
                               grad_microbatches=grad_microbatches, pull=pull,
                               gar=gar, pull_gar=pull_gar,
-                              gather_gar=gather_gar,
+                              gather_gar=gather_gar, optimizer=optimizer,
                               mda_exact_limit=mda_exact_limit,
                               byz=byz or ByzantineSpec())
 
@@ -143,6 +149,8 @@ class ByzState(NamedTuple):
     params: Any          # pytree, leaves [G, ...]
     t: jax.Array         # scalar int32
     key: jax.Array       # protocol PRNG (quorums / attacks)
+    opt: Any = ()        # per-replica optimizer state (empty for sgd), leaves
+                         # [G, ...] stacked/sharded like params
 
 
 # ---------------------------------------------------------------------------
@@ -200,16 +208,22 @@ def leaf_spec(shape: tuple[int, ...], mesh, *, leading_rep: bool = True,
     elif name in _TABLE_LEAVES and len(body) >= 2:
         spec = _place(body, (("model", -2), ("fsdp", -1)), M, K)
     else:
-        # fallback: largest divisible dims (covers odd leaves; 1D replicate)
+        # fallback: largest divisible dims (covers odd leaves). A size-1
+        # axis never claims a dim — it would shard nothing while blocking
+        # the other axis from the leaf's best dim. 'fsdp' DOES take
+        # divisible 1D bodies (biases, norm scales): GSPMD propagates the
+        # fsdp split onto them inside the epoch anyway, and an input left
+        # replicated would mismatch that output layout and silently drop
+        # the state donation (REPRO-HLO-DONATION, 2D lane).
         spec = [None] * len(body)
         order = sorted(range(len(body)), key=lambda i: -body[i])
         m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M
-                     and len(body) >= 2), None)
+                     and len(body) >= 2), None) if M > 1 else None
         if m_at is not None:
             spec[m_at] = "model"
         k_at = next((i for i in order
                      if i != m_at and body[i] % K == 0 and body[i] >= K), None)
-        if k_at is not None and K > 1 and len(body) >= 2:
+        if k_at is not None and K > 1:
             spec[k_at] = "fsdp"
     if leading_rep:
         return P("rep", *spec)
@@ -228,9 +242,12 @@ def attn_overrides(cfg, mesh) -> dict:
     return {"wq": "row", "wk": "row", "wv": "row"}
 
 
-def state_shardings(state_shapes, mesh, overrides: dict | None = None):
-    """NamedShardings for a ByzState shape-tree (per-leaf-name layout)."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes.params)
+def _named_tree_shardings(shapes_tree, mesh, overrides: dict | None = None):
+    """Per-leaf-name NamedShardings for a replica-stacked pytree. The leaf's
+    final path component keys the layout table, so optimizer moment trees
+    (which mirror the param tree's names) land on the same shards as their
+    params."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
     out = []
     for path, leaf in flat:
         if leaf.ndim == 0 or leaf.size <= 2:
@@ -239,9 +256,15 @@ def state_shardings(state_shapes, mesh, overrides: dict | None = None):
         name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
         out.append(NamedSharding(mesh, leaf_spec(leaf.shape, mesh, name=name,
                                                  overrides=overrides)))
-    params = jax.tree_util.tree_unflatten(treedef, out)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(state_shapes, mesh, overrides: dict | None = None):
+    """NamedShardings for a ByzState shape-tree (per-leaf-name layout)."""
+    params = _named_tree_shardings(state_shapes.params, mesh, overrides)
+    opt = _named_tree_shardings(state_shapes.opt, mesh, overrides)
     scalar = NamedSharding(mesh, P())
-    return ByzState(params=params, t=scalar, key=scalar)
+    return ByzState(params=params, t=scalar, key=scalar, opt=opt)
 
 
 def body_spec(body_shape: tuple[int, ...], mesh) -> tuple:
@@ -252,7 +275,8 @@ def body_spec(body_shape: tuple[int, ...], mesh) -> tuple:
     body = list(body_shape)
     spec: list = [None] * len(body)
     order = sorted(range(len(body)), key=lambda i: -body[i])
-    m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M), None)
+    m_at = next((i for i in order if body[i] % M == 0 and body[i] >= M),
+                None) if M > 1 else None
     if m_at is not None:
         spec[m_at] = "model"
     k_at = next((i for i in order
@@ -321,8 +345,9 @@ def _map_dim1(fn, *leaves, mesh=None):
     return jax.lax.fori_loop(0, L, body, init)
 
 
-_STREAM_MAX_DIM1 = 512  # layer-stack dims stream one layer at a time
-_STREAM_N_CHUNKS = 16   # wide dims (vocab tables) stream in 16 chunks
+# streaming thresholds shared with the Gram path (repro.agg.tree)
+_STREAM_MAX_DIM1 = agg.tree.STREAM_MAX_DIM1
+_STREAM_N_CHUNKS = agg.tree.STREAM_N_CHUNKS
 
 
 def _map_last_chunks(fn, *leaves, n_chunks: int, mesh=None):
@@ -402,97 +427,10 @@ def masked_pull(params, masks, cfg: ProtocolConfig, mesh=None, rule=None):
     return jax.tree.map(op, params)
 
 
-def _gram_spec(shape, mesh) -> P:
-    """Layout for the Gram contraction: the [G, G] output cannot be 'rep'-
-    sharded on both dims, so we first all-to-all the leaf — replica axis
-    replicated, 'model'/'rep'/'fsdp' spread over *body* dims — making the
-    G x G dot fully local with a tiny psum over the sharded contraction dims.
-    Without this, the SPMD partitioner all-gathers the entire replica stack
-    per device (observed: 18 GiB temps on internlm2)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    order_axes = (("model", sizes["model"]), ("rep", sizes["rep"]),
-                  ("fsdp", sizes["fsdp"]))
-    body = list(shape[1:])
-    spec: list = [None] * len(body)
-    order = sorted(range(len(body)), key=lambda i: -body[i])
-    taken: set = set()
-    for ax, size in order_axes:
-        if size <= 1:
-            continue
-        at = next((i for i in order
-                   if i not in taken and body[i] % size == 0 and body[i] >= size),
-                  None)
-        if at is not None:
-            spec[at] = ax
-            taken.add(at)
-    return P(None, *spec)
-
-
-def _chunk_gram(chunk, mesh=None):
-    del mesh
-    lf = chunk.astype(jnp.float32)
-    axes = tuple(range(1, lf.ndim))
-    # dot_general with multi-dim contraction — NO flattening reshape
-    # (tensordot reshapes to 2D, which forces XLA to replicate sharded
-    # leaves; dot_general contracts sharded dims directly).
-    return jax.lax.dot_general(lf, lf, ((axes, axes), ((), ())))   # [G, G]
-
-
-def _reduce_stream(fn, leaf, chunk_bytes: int):
-    """Accumulate fn(chunk) over slices of a large leaf: dim-1 for layer
-    stacks, last dim for wide tables (see _leaf_stream for the rationale)."""
-    from ..models import unroll_ctx
-    big = leaf.size * leaf.dtype.itemsize > chunk_bytes
-    G = leaf.shape[0]
-    if leaf.ndim < 3 or not big:
-        return fn(leaf)
-    if leaf.shape[1] <= _STREAM_MAX_DIM1:
-        ax, n_steps, csize = 1, leaf.shape[1], 1
-    elif leaf.shape[-1] % _STREAM_N_CHUNKS == 0:
-        ax = leaf.ndim - 1
-        n_steps = _STREAM_N_CHUNKS
-        csize = leaf.shape[-1] // _STREAM_N_CHUNKS
-    else:
-        return fn(leaf)
-
-    def chunk_at(i):
-        sl = jax.lax.dynamic_slice_in_dim(leaf, i * csize, csize, axis=ax)
-        return jnp.squeeze(sl, 1) if (ax == 1 and csize == 1) else sl
-
-    if unroll_ctx.active():
-        return sum(fn(chunk_at(i)) for i in range(n_steps))
-
-    def body(i, acc):
-        return acc + fn(chunk_at(i))
-
-    return jax.lax.fori_loop(0, n_steps, body, jnp.zeros((G, G), jnp.float32))
-
-
-def tree_gram(grads, mesh=None, chunk_bytes: int = 256 * 2**20) -> jax.Array:
-    """[G, G] Gram matrix over the full flattened gradient.
-
-    Whole-leaf all-to-all (gram_spec: 'rep' moved onto a body dim) + local
-    multi-dim dot + tiny psum. Empirically (EXPERIMENTS.md §Perf iteration
-    log) this is the ONLY variant the SPMD partitioner handles without
-    involuntary replication; per-chunk constraints and plain rep-sharded dots
-    both blow up. Leaves whose bodies cannot host the 'rep' axis fall back to
-    the streamed rep-gather."""
-    total = None
-    for l in jax.tree.leaves(grads):
-        lf = l.astype(jnp.float32)
-        if mesh is not None and lf.ndim >= 2:
-            spec = _gram_spec(lf.shape, mesh)
-            if "rep" in jax.tree.leaves(tuple(spec)):
-                lf = jax.lax.with_sharding_constraint(
-                    lf, NamedSharding(mesh, spec))
-                axes = tuple(range(1, lf.ndim))
-                g = jax.lax.dot_general(lf, lf, ((axes, axes), ((), ())))
-            else:
-                g = _reduce_stream(_chunk_gram, l, chunk_bytes)
-        else:
-            g = _reduce_stream(_chunk_gram, l, chunk_bytes)
-        total = g if total is None else total + g
-    return total
+# The [G, G] Gram over the full gradient is the shared streaming
+# implementation in repro.agg.tree (leaf-partial dot_general + tiny psum,
+# never a flattened [G, P] stack); re-exported here for the step builders.
+tree_gram = agg.tree.tree_gram
 
 
 def quorum_weights(d2: jax.Array, quorum_idx: jax.Array, f: int,
@@ -547,8 +485,11 @@ def aggregate_gradients(grads, weights, cfg: ProtocolConfig, mesh=None):
 
 
 def make_init_fn(bundle, pcfg: ProtocolConfig):
-    """Returns init(key) -> ByzState with replica-stacked params."""
+    """Returns init(key) -> ByzState with replica-stacked params (and, for
+    stateful optimizers, replica-stacked moment state)."""
+    from .. import optim as _optim
     pdt = jnp.dtype(bundle.cfg.param_dtype)
+    opt = _optim.get(pcfg.optimizer)
 
     def init(key):
         k_model, k_run = jax.random.split(key)
@@ -556,7 +497,8 @@ def make_init_fn(bundle, pcfg: ProtocolConfig):
         p0 = jax.tree.map(lambda l: l.astype(pdt), p0)
         params = jax.tree.map(
             lambda l: jnp.broadcast_to(l, (pcfg.n_groups,) + l.shape), p0)
-        return ByzState(params=params, t=jnp.zeros((), jnp.int32), key=k_run)
+        return ByzState(params=params, t=jnp.zeros((), jnp.int32), key=k_run,
+                        opt=opt.init(params))
 
     return init
 
@@ -571,9 +513,11 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
     is what makes the simulator the protocol's oracle. A netsim
     ``TraceDelivery`` replays realized quorums instead.
     """
+    from .. import optim as _optim
     G = pcfg.n_groups
     delivery = delivery or UniformDelivery(G, G, pcfg.q_workers,
                                            pcfg.q_servers)
+    optimizer = _optim.get(pcfg.optimizer)
 
     overrides = attn_overrides(bundle.cfg, mesh) if mesh is not None else {}
 
@@ -677,12 +621,12 @@ def make_scatter_step(bundle, pcfg: ProtocolConfig, lr_schedule,
         weights = quorum_weights(d2, push_idx, pcfg.f_workers, pcfg)
         g_hat = aggregate_gradients(grads, weights, pcfg, mesh)
 
-        # 4. local SGD update (paper Eq. 2) ------------------------------------
-        new_params = jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32)
-                          - eta * g.astype(jnp.float32)).astype(p.dtype),
-            state.params, g_hat)
-        return ByzState(params=new_params, t=state.t + 1, key=key)
+        # 4. local update (paper Eq. 2 for sgd; per-replica moments ride in
+        # state.opt for stateful optimizers) -----------------------------------
+        new_params, new_opt = optimizer.update(g_hat, state.opt, state.params,
+                                               eta)
+        return ByzState(params=new_params, t=state.t + 1, key=key,
+                        opt=new_opt)
 
     return scatter_step
 
@@ -706,7 +650,7 @@ def make_gather_step(pcfg: ProtocolConfig, with_attack: bool = False,
                                  rule=pcfg.gather_gar)
         new_params = jax.tree.map(lambda n, p: n.astype(p.dtype),
                                   new_params, state.params)
-        return ByzState(params=new_params, t=state.t, key=key)
+        return ByzState(params=new_params, t=state.t, key=key, opt=state.opt)
 
     return gather_step
 
@@ -807,7 +751,8 @@ class ProtocolEngine(EpochRunner):
     def __init__(self, bundle, pcfg: ProtocolConfig, lr_schedule, *,
                  mesh=None, delivery=None, with_attack: bool = False,
                  acc_fn: Callable | None = None, eval_set: tuple | None = None,
-                 track_delta: bool = False, metrics_every: int = 1):
+                 track_delta: bool = False, metrics_every: int = 1,
+                 rules: dict | None = None):
         if (acc_fn is None) != (eval_set is None):
             raise ValueError("acc_fn and eval_set must be given together")
         if metrics_every < 1:
@@ -816,6 +761,7 @@ class ProtocolEngine(EpochRunner):
         self.cfg = pcfg
         self.lr = lr_schedule
         self.mesh = mesh
+        self.rules = dict(rules) if rules else None
         self.with_attack = with_attack
         self.delivery = delivery or UniformDelivery(
             pcfg.n_groups, pcfg.n_groups, pcfg.q_workers, pcfg.q_servers)
@@ -848,9 +794,12 @@ class ProtocolEngine(EpochRunner):
 
     def _cache_key(self):
         mesh_key = None if self.mesh is None else id(self.mesh)
+        rules_key = (None if self.rules is None
+                     else tuple(sorted(self.rules.items())))
         return ("protocol-epoch", self.cfg, fn_cache_key(self.bundle.loss),
                 fn_cache_key(self.bundle.init), fn_cache_key(self.lr),
-                delivery_cache_key(self.delivery), mesh_key, *self._flags())
+                delivery_cache_key(self.delivery), mesh_key, rules_key,
+                *self._flags())
 
     def _instance_key(self):
         return ("protocol-epoch-inst", id(self), *self._flags())
@@ -907,10 +856,22 @@ class ProtocolEngine(EpochRunner):
 
             return lax.scan(body, state, batches)
 
+        if self.rules:
+            # install the model's logical activation-sharding rules for the
+            # whole epoch trace (loss fwd/bwd AND the in-scan eval), exactly
+            # like the launch driver wraps its train step
+            from ..models import sharding as shrules
+            rules, inner_epoch = self.rules, epoch
+
+            def epoch(state, batches, eval_x, eval_y):
+                with shrules.sharding_rules(rules):
+                    return inner_epoch(state, batches, eval_x, eval_y)
+
         return jax.jit(epoch, donate_argnums=(0,))
 
 
-def collective_volume_bytes(pcfg: ProtocolConfig, n_params: int) -> int:
+def collective_volume_bytes(pcfg: ProtocolConfig, n_params: int,
+                            *, fsdp: int = 1) -> int:
     """Modeled per-device cross-'rep' collective exchange (bytes) of one
     scatter step's model/gradient payloads, HLO-verified by the compiled-
     artifact auditor (``repro.analyze``, REPRO-HLO-COLLECTIVES):
@@ -930,7 +891,14 @@ def collective_volume_bytes(pcfg: ProtocolConfig, n_params: int) -> int:
     materializes the replicated stack per device; see
     ``aggregate_gradients``), not in ring-model traffic. The model covers
     the exchange primitives (``masked_pull`` + ``aggregate_gradients``);
-    distance/Gram traffic for the selection weights rides on top."""
+    distance/Gram traffic for the selection weights rides on top.
+
+    With the 'fsdp' axis lit (``fsdp`` = K > 1) each device holds 1/K of
+    every replica's payload, so both exchanges ring-shift 1/K of the bytes:
+    the all-gather result is the fsdp-sharded ``[G, P/K]`` stack, not the
+    full ``[G, P]``. The default K=1 is the 1D model. Leaves whose dims K
+    does not divide stay replicated and move full-size — the HLO audit's
+    10% tolerance absorbs that remainder at repo shapes."""
     itemsize = jnp.dtype(pcfg.exchange_dtype).itemsize
     G = pcfg.n_groups
-    return 2 * (G - 1) * n_params * itemsize
+    return 2 * (G - 1) * n_params * itemsize // fsdp

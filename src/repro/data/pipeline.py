@@ -153,6 +153,84 @@ class DeviceBatchStream:
         return x[0], y[0]
 
 
+@dataclass(frozen=True)
+class TokenSpec:
+    """Synthetic LM data spec (the token analogue of :class:`MixtureSpec`).
+
+    Zipf-distributed tokens (``zipf > 0``) keep the unigram statistics
+    learnable — uniform tokens pin the cross-entropy at ``ln vocab`` and no
+    training signal exists; ``zipf = 0`` gives uniform tokens."""
+    vocab: int = 512
+    seq: int = 64
+    zipf: float = 1.2
+
+
+def _token_logits(spec: TokenSpec):
+    return -spec.zipf * jnp.log(jnp.arange(1, spec.vocab + 1,
+                                           dtype=jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("spec", "n_workers", "batch_per_worker"))
+def sample_token_batch(key: jax.Array, spec: TokenSpec, n_workers: int,
+                       batch_per_worker: int):
+    """One next-token batch: dict(tokens, labels), leaves [n_w, b, seq]."""
+    shape = (n_workers, batch_per_worker, spec.seq + 1)
+    if spec.zipf > 0:
+        toks = jax.random.categorical(key, _token_logits(spec),
+                                      shape=shape).astype(jnp.int32)
+    else:
+        toks = jax.random.randint(key, shape, 0, spec.vocab)
+    return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+
+@partial(jax.jit, static_argnames=("spec", "n_workers", "batch_per_worker",
+                                   "length"))
+def sample_token_epoch(key: jax.Array, spec: TokenSpec, n_workers: int,
+                       batch_per_worker: int, length: int):
+    """``length`` stacked token batches from one device-side call. Walks the
+    same key chain as :func:`token_stream` (one split per step, identical
+    sampling), so the concatenation of successive calls is bit-identical to
+    the host generator's batch sequence. Returns ``(next_key, batches)`` with
+    leaves ``[L, n_w, b, seq]``."""
+    def split_one(k, _):
+        k, kb = jax.random.split(k)
+        return k, kb
+
+    key, kbs = lax.scan(split_one, key, None, length=length)
+    batches = jax.vmap(lambda kb: sample_token_batch(
+        kb, spec, n_workers, batch_per_worker))(kbs)
+    return key, batches
+
+
+class DeviceTokenStream:
+    """Device-resident LM data stream with the :class:`DeviceBatchStream`
+    interface (``next``/``skip``/``eval_set``), so the fused protocol engine
+    drives token models exactly like the mixture task. Same seed => the
+    concatenation of ``next`` calls equals :func:`token_stream`'s sequence."""
+
+    def __init__(self, seed: int, spec: TokenSpec, n_workers: int,
+                 batch_per_worker: int):
+        self.spec = spec
+        self.n_workers = n_workers
+        self.batch_per_worker = batch_per_worker
+        self._key = jax.random.PRNGKey(seed)
+
+    def next(self, length: int, n_workers: int | None = None):
+        nw = self.n_workers if n_workers is None else n_workers
+        self._key, batches = sample_token_epoch(
+            self._key, self.spec, nw, self.batch_per_worker, length)
+        return batches
+
+    def skip(self, length: int):
+        if length:
+            self._key = _advance_key(self._key, length)
+
+    def eval_set(self, n: int = 256, eval_seed: int = 10_007):
+        """Held-out eval batch: ``(tokens [n, seq], labels [n, seq])``."""
+        b = sample_token_batch(jax.random.PRNGKey(eval_seed), self.spec, 1, n)
+        return b["tokens"][0], b["labels"][0]
+
+
 def token_stream(seed: int, vocab: int, n_workers: int, batch_per_worker: int,
                  seq_len: int, steps: int, zipf: float = 1.2):
     """Deterministic LM token batches: dict(tokens, labels) with leaves

@@ -24,12 +24,14 @@ the fused epoch engine, and netsim trace-driven runs alike.
 from __future__ import annotations
 
 from . import presets, runners, spec  # noqa: F401
-from .presets import get, markdown_table, names, register, runners_table
+from .presets import (get, markdown_table, models_table, names, register,
+                      runners_table)
 from .runners import RunResult, git_sha, provenance, run, write_result
 from .spec import DATA, MODELS, SCHEDULES, Experiment
 
 __all__ = [
     "DATA", "Experiment", "MODELS", "RunResult", "SCHEDULES", "get",
-    "git_sha", "markdown_table", "names", "presets", "provenance",
-    "register", "run", "runners", "runners_table", "spec", "write_result",
+    "git_sha", "markdown_table", "models_table", "names", "presets",
+    "provenance", "register", "run", "runners", "runners_table", "spec",
+    "write_result",
 ]

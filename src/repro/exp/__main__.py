@@ -1,10 +1,12 @@
-"""Print the registry-derived README tables (runners + experiment presets).
+"""Print the registry-derived README tables (runners + models + presets).
 
     PYTHONPATH=src python -m repro.exp
 """
-from .presets import markdown_table, runners_table
+from .presets import markdown_table, models_table, runners_table
 
 if __name__ == "__main__":
     print(runners_table())
+    print()
+    print(models_table())
     print()
     print(markdown_table())

@@ -151,6 +151,22 @@ register(Experiment(name="elastic/netsim_churn", scenario="membership_churn",
                     **_ELASTIC_COMMON))
 
 
+# lm presets: zoo architectures through the distributed protocol — one per
+# trainable model family (dense transformer / MoE / RWKV6 SSM), reduced
+# configs on the Zipf token task. G=4 co-located groups satisfy Table 1
+# (n_w >= 3·1+1 = 4 workers, n_ps >= 3·0+2 = 2 servers) AND split 2D on an
+# 8-device fleet: make_protocol_mesh lights up (rep=4, fsdp=2, model=1), so
+# these presets are the repo's paper-scale 2D-sharding acceptance path. The
+# "acc" metric is the NEGATIVE eval loss (higher is better; README §Models).
+_LM_COMMON = dict(
+    runner="protocol", n_workers=4, f_workers=1, n_servers=4, f_servers=0,
+    T=5, steps=12, batch=4, data="tokens_tiny", schedule="constant",
+    lr0=0.02, metrics_every=4, eval_n=64)
+register(Experiment(name="lm/tfm_tiny", model="tfm_tiny", **_LM_COMMON))
+register(Experiment(name="lm/moe_tiny", model="moe_tiny", **_LM_COMMON))
+register(Experiment(name="lm/rwkv_tiny", model="rwkv_tiny", **_LM_COMMON))
+
+
 # ---------------------------------------------------------------------------
 # registry-derived documentation (README preset table)
 # ---------------------------------------------------------------------------
@@ -174,8 +190,8 @@ def runners_table() -> str:
         ("protocol", "donated `lax.scan` epochs (`ProtocolEngine`)",
          "uniform or trace",
          "`[G, ...]` sharded over the ('rep','fsdp','model') mesh",
-         "2(G−1)·P either engine (HLO-audited; they differ in temp "
-         "memory, not ring traffic)"),
+         "2(G−1)·P/K either engine, K = fsdp axis size (HLO-audited; the "
+         "engines differ in temp memory, not ring traffic)"),
         ("elastic", "protocol epochs chunked at membership boundaries "
          "(`core/membership.py`): mesh/quorums re-formed per epoch, "
          "checkpointed resume, DMC-seeded re-admission", "uniform",
@@ -187,6 +203,35 @@ def runners_table() -> str:
            "|---|---|---|---|---|"]
     for name, loop, deliv, layout, vol in rows:
         out.append(f"| `{name}` | {loop} | {deliv} | {layout} | {vol} |")
+    return "\n".join(out)
+
+
+def models_table() -> str:
+    """README "Models" table (``python -m repro.exp`` regenerates it).
+
+    One row per ``repro.exp.spec.MODELS`` registry entry. Zoo archs lower
+    through ``models.registry.get_bundle`` and train only on the protocol
+    runner (they need the mesh + activation-sharding rules); their "acc"
+    metric is the NEGATIVE eval loss, so higher is better everywhere."""
+    from ..models.registry import get_bundle
+    from .spec import MODELS, is_arch_model
+    out = ["| model | definition | family | runners | `acc` metric |",
+           "|---|---|---|---|---|"]
+    for name in sorted(MODELS):
+        m = MODELS[name]
+        if is_arch_model(name):
+            cfg = get_bundle(m["arch"],
+                             reduced=m.get("reduced", False)).cfg
+            defn = f"zoo `{m['arch']}`"
+            if m.get("reduced"):
+                defn += " (reduced)"
+            fam, runners = cfg.family, "`protocol`"
+            metric = "negative eval loss (higher is better)"
+        else:
+            defn = f"MLP (hidden {m['hidden']}, depth {m['depth']})"
+            fam, runners = "mlp", "all"
+            metric = "eval accuracy"
+        out.append(f"| `{name}` | {defn} | {fam} | {runners} | {metric} |")
     return "\n".join(out)
 
 

@@ -42,7 +42,8 @@ from ..agg.dispatch import backend_override
 from ..agg.rules import use_sort_network
 from ..core.engine import EpochEngine
 from ..core.simulator import coordinatewise_diameter_sum, l2_diameter
-from ..data.pipeline import DeviceBatchStream, classification_stream
+from ..data.pipeline import (DeviceBatchStream, DeviceTokenStream,
+                             classification_stream)
 from . import presets
 from .spec import Experiment
 
@@ -237,22 +238,44 @@ def _protocol_mesh(G: int):
     return mesh
 
 
+def _lm_acc(bundle):
+    """LM metric under the runners' uniform ``acc`` key: NEGATIVE eval loss
+    (higher is better, like accuracy; documented in README §Models)."""
+
+    def acc(params, tokens, labels):
+        return -bundle.loss(params, {"tokens": tokens, "labels": labels})
+
+    return acc
+
+
 def _run_protocol(e: Experiment, delivery=None, netsim=None) -> RunResult:
     from ..core import protocol as _protocol
     from ..launch.mesh import use_mesh
+    from .spec import DATA, is_arch_model
     pcfg = e.to_protocol_config()
     G = pcfg.n_groups
-    init_fn, loss_fn, acc = e.build_problem()
-    bundle = _protocol.ProblemBundle(init=init_fn, loss=loss_fn)
+    bundle = e.build_bundle()
     mesh = _protocol_mesh(G)
-    stream = DeviceBatchStream(e.seed, e.mixture, G, e.batch)
-    ex, ey = stream.eval_set(e.eval_n)
+    if is_arch_model(e.model):
+        # zoo arch through the protocol: token stream, activation sharding
+        # rules from the launch layer, negative-eval-loss metric
+        from ..launch.steps import train_rules
+        stream = DeviceTokenStream(e.seed, DATA[e.data], G, e.batch)
+        ex, ey = stream.eval_set(e.eval_n)
+        acc = _lm_acc(bundle)
+        rules = train_rules(mesh, bundle.cfg)
+    else:
+        _, _, acc = e.build_problem()
+        stream = DeviceBatchStream(e.seed, e.mixture, G, e.batch)
+        ex, ey = stream.eval_set(e.eval_n)
+        rules = None
     with_attack = bool(e.byz.worker_attack or e.byz.server_attack)
     with use_mesh(mesh):
         eng = _protocol.ProtocolEngine(
             bundle, pcfg, e.build_schedule(), mesh=mesh, delivery=delivery,
             with_attack=with_attack, acc_fn=acc, eval_set=(ex, ey),
-            track_delta=e.track_delta, metrics_every=e.metrics_every)
+            track_delta=e.track_delta, metrics_every=e.metrics_every,
+            rules=rules)
         state = eng.init_state(jax.random.PRNGKey(e.seed))
         t0 = time.time()
         if e.ckpt_every:
@@ -425,8 +448,16 @@ def _run_elastic(e: Experiment) -> RunResult:
             elif prev_active != seg.active:
                 params = _membership.reform_params(state.params, prev_active,
                                                    seg.active)
+                # re-stack per-replica optimizer moments alongside the params
+                # (scalars — adamw's step count — ride through untouched)
+                opt = jax.tree.map(
+                    lambda l: _membership.reform_params(l, prev_active,
+                                                        seg.active)
+                    if getattr(l, "ndim", 0) >= 1
+                    and l.shape[0] == len(prev_active) else l,
+                    state.opt)
                 state = _protocol.ByzState(params=params, t=state.t,
-                                           key=state.key)
+                                           key=state.key, opt=opt)
                 state = jax.tree.map(jax.device_put, state,
                                      _shardings(pcfg, mesh))
                 if e.ckpt_dir:

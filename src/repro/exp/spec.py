@@ -37,32 +37,55 @@ from ..configs.paper_models import make_mlp_problem
 from ..core.attacks import GRADIENT_ATTACKS, MODEL_ATTACKS, ByzantineSpec
 from ..core.membership import MembershipPlan, epoch_config
 from ..core.simulator import ByzSGDConfig
-from ..data.pipeline import MixtureSpec
+from ..data.pipeline import MixtureSpec, TokenSpec
 from ..optim import schedules as _schedules
 
 # ---------------------------------------------------------------------------
 # named resources: models / data / lr schedules
 # ---------------------------------------------------------------------------
 
-#: model registry: name -> MLP width (depth-2 MLPs mirror the paper's
-#: CPU-scale testbed models; see configs/paper_models.py)
-MODELS: dict[str, dict[str, int]] = {
+#: model registry. Two kinds of entry:
+#:
+#: * ``{"hidden", "depth"}`` — MLP width (depth-2 MLPs mirror the paper's
+#:   CPU-scale testbed models; see configs/paper_models.py), trainable by
+#:   every runner;
+#: * ``{"arch", "reduced", ...overrides}`` — a ``models/`` zoo architecture,
+#:   lowered via :func:`repro.models.registry.get_bundle` (extra keys are
+#:   ``ArchConfig.reduced`` overrides). Arch entries train through the
+#:   distributed protocol only (``runner="protocol"``): their sharded-pytree
+#:   states, activation sharding rules and token batches are protocol-engine
+#:   capabilities the single-host simulator does not carry.
+MODELS: dict[str, dict[str, Any]] = {
     "mlp_h32": {"hidden": 32, "depth": 2},
     "mlp_h64": {"hidden": 64, "depth": 2},
     "mlp_h128": {"hidden": 128, "depth": 2},
     "mlp_h256": {"hidden": 256, "depth": 2},
     "mlp_h1024": {"hidden": 1024, "depth": 2},
+    # reduced zoo archs — one per trainable model family (dense transformer
+    # with the flash-attention hot path, MoE, RWKV6 SSM)
+    "tfm_tiny": {"arch": "phi4-mini-3.8b", "reduced": True},
+    "moe_tiny": {"arch": "qwen3-moe-235b-a22b", "reduced": True},
+    "rwkv_tiny": {"arch": "rwkv6-3b", "reduced": True},
 }
 
-#: data registry: name -> synthetic mixture task (see data/pipeline.py for
-#: why MNIST/CIFAR are substituted)
-DATA: dict[str, MixtureSpec] = {
+
+def is_arch_model(name: str) -> bool:
+    """True iff the MODELS entry lowers through the models/ zoo registry."""
+    return "arch" in MODELS[name]
+
+#: data registry: name -> synthetic task. MixtureSpec entries feed the MLP
+#: models (see data/pipeline.py for why MNIST/CIFAR are substituted);
+#: TokenSpec entries feed the arch-registry LM models (Zipf-distributed
+#: next-token batches).
+DATA: dict[str, MixtureSpec | TokenSpec] = {
     # the benchmark default (harder task: close centres, high noise)
     "mixture10": MixtureSpec(n_classes=10, dim=32, sep=1.0, noise=1.2),
     # the quickstart/example task (well-separated, converges in ~100 steps)
     "mixture10_easy": MixtureSpec(n_classes=10, dim=32),
     # tiny task for smoke presets and netsim walkthroughs
     "mixture5_small": MixtureSpec(n_classes=5, dim=16, sep=2.5),
+    # LM token task matching the reduced zoo vocab (ArchConfig.reduced)
+    "tokens_tiny": TokenSpec(vocab=512, seq=64),
 }
 
 #: lr-schedule registry: name -> factory(lr0, decay) (paper condition B.1)
@@ -110,6 +133,8 @@ class Experiment:
     model: str = "mlp_h64"
     data: str = "mixture10"
     schedule: str = "inverse_linear"
+    optimizer: str = "sgd"            # repro.optim registry ref; non-sgd is a
+                                      # protocol/elastic-runner capability
     lr0: float = 0.05
     decay: float = 0.005
     l2: float = 1e-4
@@ -194,6 +219,37 @@ class Experiment:
             if val not in reg:
                 raise ValueError(f"unknown {key} {val!r}; "
                                  f"registered: {sorted(reg)}")
+        if is_arch_model(self.model):
+            if self.runner != "protocol":
+                raise ValueError(
+                    f"model {self.model!r} is an arch-registry model and "
+                    'trains through runner="protocol" only (sharded states, '
+                    "activation sharding rules and token batches are "
+                    f"protocol-engine capabilities); got {self.runner!r}")
+            if not isinstance(DATA[self.data], TokenSpec):
+                raise ValueError(
+                    f"arch model {self.model!r} needs token data (a TokenSpec "
+                    f"DATA entry); {self.data!r} is "
+                    f"{type(DATA[self.data]).__name__}")
+            vocab = self.build_bundle().cfg.vocab
+            if DATA[self.data].vocab != vocab:
+                raise ValueError(
+                    f"data {self.data!r} has vocab {DATA[self.data].vocab} "
+                    f"but model {self.model!r} has vocab {vocab}")
+        elif isinstance(DATA[self.data], TokenSpec):
+            raise ValueError(
+                f"MLP model {self.model!r} needs mixture data (a MixtureSpec "
+                f"DATA entry); {self.data!r} is a TokenSpec")
+        from .. import optim as _optim
+        if self.optimizer not in _optim.OPTIMIZERS:
+            raise ValueError(f"unknown optimizer {self.optimizer!r}; "
+                             f"registered: {sorted(_optim.OPTIMIZERS)}")
+        if self.optimizer != "sgd" and self.runner not in ("protocol",
+                                                           "elastic"):
+            raise ValueError(
+                f"optimizer={self.optimizer!r} needs the protocol/elastic "
+                "runner (the single-host simulator implements the paper's "
+                f"Eq. 2 SGD only); got runner={self.runner!r}")
         default_decay = type(self).__dataclass_fields__["decay"].default
         if self.schedule not in SCHEDULES_WITH_DECAY \
                 and self.decay != default_decay:
@@ -338,7 +394,7 @@ class Experiment:
             f_workers=self.f_workers, f_servers=self.f_servers,
             q_workers=cfg.q_workers, q_servers=cfg.q_servers,
             gar=self.gar, pull_gar=self.pull_gar,
-            gather_gar=self.gather_gar,
+            gather_gar=self.gather_gar, optimizer=self.optimizer,
             mda_exact_limit=self.mda_exact_limit, byz=self.byz)
         for key, mine in (("n_groups", self.n_workers),
                           ("f_workers", self.f_workers),
@@ -347,6 +403,7 @@ class Experiment:
                           ("q_servers", cfg.q_servers), ("T", self.T),
                           ("gar", self.gar), ("pull_gar", self.pull_gar),
                           ("gather_gar", self.gather_gar),
+                          ("optimizer", self.optimizer),
                           ("byz", self.byz)):
             if getattr(pcfg, key) != mine:
                 raise ValueError(f"lowering to ProtocolConfig changed {key}: "
@@ -390,12 +447,33 @@ class Experiment:
 
     def build_problem(self):
         """(init_fn, loss_fn, accuracy_fn) for the named model on the named
-        data spec."""
+        data spec (MLP models; arch models lower via :meth:`build_bundle`)."""
+        if is_arch_model(self.model):
+            raise ValueError(
+                f"model {self.model!r} is an arch-registry model; it lowers "
+                "through build_bundle() (a ModelBundle), not the MLP "
+                "(init, loss, acc) problem triple")
         mix = self.mixture
         m = MODELS[self.model]
         return make_mlp_problem(dim=mix.dim, hidden=m["hidden"],
                                 n_classes=mix.n_classes, depth=m["depth"],
                                 l2=self.l2)
+
+    def build_bundle(self):
+        """The protocol-ready bundle for the named model: the zoo
+        :class:`~repro.models.registry.ModelBundle` for arch entries
+        (registry overrides applied on the reduced config), or the MLP
+        problem wrapped in a
+        :class:`~repro.core.protocol.ProblemBundle`."""
+        m = MODELS[self.model]
+        if "arch" in m:
+            from ..models.registry import get_bundle
+            kw = {k: v for k, v in m.items() if k not in ("arch", "reduced")}
+            return get_bundle(m["arch"], reduced=m.get("reduced", False),
+                              **kw)
+        from ..core.protocol import ProblemBundle
+        init, loss, _ = self.build_problem()
+        return ProblemBundle(init=init, loss=loss)
 
     def build_schedule(self):
         return SCHEDULES[self.schedule](self.lr0, self.decay)

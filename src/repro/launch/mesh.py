@@ -79,7 +79,8 @@ def make_byz_mesh(mesh, n_groups: int) -> Mesh:
     return _mk_mesh(devs, ("rep", "fsdp", "model"))
 
 
-def make_protocol_mesh(n_groups: int, devices=None) -> Mesh:
+def make_protocol_mesh(n_groups: int, devices=None, *,
+                       fsdp: int | None = None) -> Mesh:
     """('rep', 'fsdp', 'model') mesh over the *available* devices for a
     G-group protocol run (the ``Experiment.runner="protocol"`` path).
 
@@ -87,13 +88,21 @@ def make_protocol_mesh(n_groups: int, devices=None) -> Mesh:
     slices must divide into the groups), this places 'rep' on the largest
     divisor of ``n_groups`` that the device count can host — down to a
     1-device (1,1,1) mesh, where all G replica stacks live on one chip and the
-    protocol is oracle-checked against the single-host simulator."""
+    protocol is oracle-checked against the single-host simulator. Devices left
+    over after the 'rep' placement become the intra-group 'fsdp' (ZeRO) axis:
+    8 devices at G=4 give a (4, 2, 1) mesh — each group's replica + optimizer
+    state sharded over its 2 chips. ``fsdp`` overrides the inferred axis size
+    (must fit ``rep * fsdp <= len(devices)``)."""
     devices = list(jax.devices()) if devices is None else list(devices)
     if not devices:
         raise ValueError("no jax devices available for the protocol mesh")
     rep = max(d for d in range(1, min(n_groups, len(devices)) + 1)
               if n_groups % d == 0)
-    devs = np.asarray(devices[:rep]).reshape(rep, 1, 1)
+    K = len(devices) // rep if fsdp is None else fsdp
+    if rep * K > len(devices):
+        raise ValueError(f"fsdp={K} needs {rep * K} devices for rep={rep}, "
+                         f"have {len(devices)}")
+    devs = np.asarray(devices[:rep * K]).reshape(rep, K, 1)
     return _mk_mesh(devs, ("rep", "fsdp", "model"))
 
 

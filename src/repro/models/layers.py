@@ -133,12 +133,16 @@ def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return _naive_attention(q, k, v, causal=causal, window=window,
                                 cross=cross)
     import os as _os
-    if (jax.default_backend() == "tpu"
-            and _os.environ.get("REPRO_NO_FLASH") != "1"):
-        # production TPU path: fused Pallas flash attention (VMEM-resident
-        # scores — removes the O(S^2) HBM traffic that dominates the memory
-        # roofline term; kernels/flash_attention). Validated in interpret
-        # mode on CPU; REPRO_NO_FLASH=1 falls back to the blocked path.
+    if ((jax.default_backend() == "tpu"
+         and _os.environ.get("REPRO_NO_FLASH") != "1")
+            or _os.environ.get("REPRO_FLASH") == "1"):
+        # production TPU path: fused Pallas flash attention, forward AND
+        # backward (VMEM-resident scores — removes the O(S^2) HBM traffic
+        # that dominates the memory roofline term; kernels/flash_attention
+        # pairs the kernels via custom_vjp, so the training hot path runs
+        # them too). REPRO_NO_FLASH=1 falls back to the blocked path;
+        # REPRO_FLASH=1 forces the kernels elsewhere (Pallas interpret mode
+        # off-TPU — the CI hot-path smoke).
         from ..kernels.flash_attention.ops import flash_attention as _fa
         return _fa(q, k, v, causal=causal and not cross, window=window,
                    q_block=q_block, kv_block=kv_block)

@@ -1,0 +1,45 @@
+"""repro.optim — optimizers + lr schedules for the protocol update step.
+
+``OPTIMIZERS`` is the spec-level registry ``Experiment.optimizer`` (and
+``ProtocolConfig.optimizer``) resolve: each entry is an ``(init, update)``
+pair with the uniform signature
+
+    opt_state = init(params)
+    new_params, new_opt_state = update(grads, opt_state, params, lr)
+
+applied to the replica-stacked ``[G, ...]`` param tree, so every server
+replica carries its own moment state (stacked alongside its replica and
+sharded with the same per-leaf-name layout — see
+``repro.core.protocol.state_shardings``). ``sgd`` is stateless (the paper's
+Eq. 2 update; its opt_state is ``()``) and is the default everywhere; the
+single-host simulator implements Eq. 2 directly, so non-sgd optimizers are a
+protocol-runner capability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from . import adamw, schedules, sgd  # noqa: F401
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: callable
+    update: callable
+
+
+OPTIMIZERS: dict[str, Optimizer] = {
+    "sgd": Optimizer("sgd", sgd.init, sgd.update),
+    "adamw": Optimizer("adamw", adamw.init, adamw.update),
+}
+
+
+def get(name: str) -> Optimizer:
+    try:
+        return OPTIMIZERS[name]
+    except KeyError:
+        raise KeyError(f"unknown optimizer {name!r}; "
+                       f"have {sorted(OPTIMIZERS)}") from None
+
+
+__all__ = ["OPTIMIZERS", "Optimizer", "adamw", "get", "schedules", "sgd"]

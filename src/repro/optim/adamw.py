@@ -38,6 +38,3 @@ def update(grads, state: AdamWState, params, lr, *, b1=0.9, b2=0.95,
                                        + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
         params, mh, vh)
     return new_params, AdamWState(m, v, c)
-
-
-OPTIMIZERS = {"sgd": None, "adamw": None}  # populated in __init__

@@ -6,6 +6,7 @@ what makes per-replica memory tractable at 100B+ scale (DESIGN.md layouts).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 
 def init(params):
@@ -14,6 +15,10 @@ def init(params):
 
 
 def update(grads, opt_state, params, lr):
+    # f32 accumulation regardless of param dtype (paper Eq. 2 arithmetic —
+    # matches the protocol scatter step exactly, oracle equivalence)
     new_params = jax.tree.map(
-        lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads)
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
     return new_params, opt_state

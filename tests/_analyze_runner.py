@@ -18,12 +18,19 @@ def main():
     # engines, within the audit's 10% tolerance (measured: exact for the
     # smoke preset's G=5 / P=1765 exchange)
     for engine in ("naive", "sharded"):
-        measured, modeled, n_params = hlo.measure_exchange_bytes(engine)
-        assert n_params > 0 and modeled > 0
-        err = abs(measured - modeled) / modeled
-        print(f"{engine}: model={modeled}B hlo={measured:.0f}B "
-              f"err={err:.1%} P={n_params}")
-        assert err <= 0.10, (engine, measured, modeled)
+        for two_d in (False, True):
+            measured, modeled, n_params = hlo.measure_exchange_bytes(
+                engine, two_d=two_d)
+            assert n_params > 0 and modeled > 0
+            err = abs(measured - modeled) / modeled
+            label = f"{engine}[rep,fsdp]" if two_d else engine
+            print(f"{label}: model={modeled}B hlo={measured:.0f}B "
+                  f"err={err:.1%} P={n_params}")
+            assert err <= 0.10, (label, measured, modeled)
+    # the 2D model halves with K: same exchange, half of it local
+    pcfg4 = protocol.ProtocolConfig.derive(4, T=5, engine="sharded")
+    assert protocol.collective_volume_bytes(pcfg4, 1000, fsdp=2) == \
+        protocol.collective_volume_bytes(pcfg4, 1000) // 2
     assert hlo.check_collectives(".") == []
 
     # donation: every donated state leaf must appear in input_output_alias

@@ -1,0 +1,25 @@
+"""The committed example drivers stay runnable (subprocess smokes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_lm_distributed_tiny():
+    """`--scale tiny` rides the lm/tfm_tiny preset: protocol runner on the
+    forced-8-device (rep=4, fsdp=2) mesh, negative-eval-loss metric."""
+    script = os.path.join(os.path.dirname(__file__), "..", "examples",
+                          "train_lm_distributed.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, script, "--scale", "tiny", "--steps", "4"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "lm/tfm_tiny mesh={'rep': 4, 'fsdp': 2, 'model': 1}" \
+        in out.stdout, out.stdout
+    assert "final neg-eval-loss" in out.stdout, out.stdout

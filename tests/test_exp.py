@@ -189,6 +189,24 @@ class TestPresets:
         for name in exp.names():
             assert f"`{name}`" in table
 
+    def test_models_table_lists_all(self):
+        table = exp.models_table()
+        for name in MODELS:
+            assert f"`{name}`" in table
+
+    def test_readme_tables_fresh(self):
+        """Doc-drift gate: changing a runner, model, or preset must
+        regenerate the README tables (`python -m repro.exp`)."""
+        import os
+        root = os.path.join(os.path.dirname(__file__), "..")
+        with open(os.path.join(root, "README.md")) as f:
+            readme = f.read()
+        for table in (exp.runners_table(), exp.models_table(),
+                      exp.markdown_table()):
+            assert table in readme, (
+                "README table stale — regenerate with "
+                "`PYTHONPATH=src python -m repro.exp`:\n" + table)
+
 
 # ---------------------------------------------------------------------------
 # one spec, three runners (the acceptance criterion)

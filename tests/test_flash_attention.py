@@ -44,3 +44,69 @@ def test_flash_decode_shape():
                           interpret=True)
     want = attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradient path: the custom_vjp backward kernels vs jax.grad of the oracle
+# ---------------------------------------------------------------------------
+
+GRAD_CASES = [
+    # B, S, H, kvH, hd, causal, window, qb, kb — training shapes: causal,
+    # GQA, sliding window, non-block-multiple lengths, a decoder-free case
+    (2, 64, 4, 2, 32, True, 0, 64, 64),
+    (1, 100, 4, 4, 32, True, 0, 32, 32),
+    (2, 64, 4, 2, 32, True, 32, 64, 32),
+    (2, 48, 4, 4, 16, False, 0, 16, 16),
+]
+
+
+def _grads(fn, q, k, v, do):
+    def scalar(q, k, v):
+        return jnp.vdot(fn(q, k, v).astype(jnp.float32),
+                        do.astype(jnp.float32))
+
+    return jax.grad(scalar, argnums=(0, 1, 2))(q, k, v)
+
+
+@pytest.mark.parametrize("B,S,H,kvH,hd,causal,window,qb,kb", GRAD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_grads_match_ref(B, S, H, kvH, hd, causal, window, qb, kb,
+                               dtype):
+    """dq/dk/dv from the Pallas backward kernels match jax.grad through the
+    naive reference — bf16 inputs ride f32 kernel accumulation, so the bf16
+    tolerance is one rounding step, not a looser algorithm."""
+    q = (0.5 * jax.random.normal(jax.random.fold_in(KEY, 7),
+                                 (B, S, H, hd))).astype(dtype)
+    k = (0.5 * jax.random.normal(jax.random.fold_in(KEY, 8),
+                                 (B, S, kvH, hd))).astype(dtype)
+    v = (0.5 * jax.random.normal(jax.random.fold_in(KEY, 9),
+                                 (B, S, kvH, hd))).astype(dtype)
+    do = (0.5 * jax.random.normal(jax.random.fold_in(KEY, 10),
+                                  (B, S, H, hd))).astype(dtype)
+    got = _grads(
+        lambda q, k, v: flash_attention(q, k, v, causal=causal,
+                                        window=window, q_block=qb,
+                                        kv_block=kb, interpret=True),
+        q, k, v, do)
+    want = _grads(
+        lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window),
+        q, k, v, do)
+    tol = 3e-3 if dtype == jnp.float32 else 5e-2
+    for name, g, w in zip("qkv", got, want):
+        g = np.asarray(g, np.float32)
+        w = np.asarray(w, np.float32)
+        rel = np.max(np.abs(g - w)) / (np.max(np.abs(w)) + 1e-6)
+        assert rel < tol, f"d{name}: rel err {rel:.2e} (tol {tol})"
+
+
+def test_flash_grad_dtypes():
+    """Gradients come back in the input dtype (bf16 in -> bf16 grads)."""
+    B, S, H, hd = 1, 32, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(KEY, (B, S, H, hd), jnp.bfloat16)
+    v = jax.random.normal(KEY, (B, S, H, hd), jnp.bfloat16)
+    dq, dk, dv = _grads(
+        lambda q, k, v: flash_attention(q, k, v, interpret=True, q_block=16,
+                                        kv_block=16),
+        q, k, v, jnp.ones((B, S, H, hd), jnp.bfloat16))
+    assert dq.dtype == dk.dtype == dv.dtype == jnp.bfloat16

@@ -18,3 +18,19 @@ def test_protocol_end_to_end():
                          capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "PROTOCOL_TESTS_PASS" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_exp_2d_mesh_oracle():
+    """lm/tfm_tiny through the protocol runner on the full (rep=4, fsdp=2)
+    mesh vs the same spec pinned to one device: final params must agree —
+    2D sharding is a layout decision, never a semantics one."""
+    runner = os.path.join(os.path.dirname(__file__), "_exp_2d_runner.py")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run([sys.executable, runner], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "EXP_2D_ORACLE_PASS" in out.stdout, out.stdout
